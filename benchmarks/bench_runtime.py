@@ -1,0 +1,239 @@
+"""Runtime benchmarks mirroring the paper's figures.
+
+- variants(): Figs 4-6 — efficiency vs granularity with each optimization
+  removed: full | -waitfree (locked deps) | -dtlock (PTLock global-lock
+  scheduler) | -pool (fresh allocations).
+- runtimes(): Figs 7-9 — full delegation runtime vs work-stealing vs
+  global-lock baselines (the GOMP/LLVM-style comparison).
+- locks_micro(): §3.4 microbenchmark — task-serving throughput DTLock vs
+  PTLock vs ticket vs mutex (paper reports ~4x DTLock vs PTLock) and
+  SPSC-buffered vs serial insertion (paper reports ~12x).
+
+Efficiency metric (paper §6.2): performance of a run / best performance
+across all runs of the same benchmark — unit-agnostic, higher is better.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import (DTLock, MutexLock, PTLock, SPSCQueue, TaskRuntime,
+                        TicketLock)
+
+from benchmarks.taskbench import BENCHMARKS, granularity_kwargs
+
+GRANULARITIES = ("fine", "medium", "coarse")
+
+VARIANTS = {
+    "full": dict(scheduler="delegation", deps="waitfree", use_pool=True),
+    "-waitfree": dict(scheduler="delegation", deps="locked", use_pool=True),
+    "-dtlock": dict(scheduler="global-lock", deps="waitfree", use_pool=True),
+    "-pool": dict(scheduler="delegation", deps="waitfree", use_pool=False),
+}
+
+RUNTIMES = {
+    "repro(delegation)": dict(scheduler="delegation", deps="waitfree"),
+    "work-stealing": dict(scheduler="work-stealing", deps="waitfree"),
+    "global-lock": dict(scheduler="global-lock", deps="waitfree"),
+}
+
+
+def run_one(bench: str, gran: str, rt_kwargs: dict, n_workers=3,
+            repeats=3) -> dict:
+    """Returns tasks/second (median of repeats) for one configuration."""
+    kw = granularity_kwargs(bench, gran)
+    times = []
+    n_tasks = 0
+    for _ in range(repeats):
+        rt = TaskRuntime(n_workers=n_workers, **rt_kwargs).start()
+        t0 = time.perf_counter()
+        n_tasks = BENCHMARKS[bench](rt, **kw)
+        ok = rt.barrier(timeout=300)
+        dt = time.perf_counter() - t0
+        rt.shutdown()
+        assert ok, f"{bench}/{gran} did not quiesce"
+        times.append(dt)
+    times.sort()
+    dt = times[len(times) // 2]
+    return {"bench": bench, "gran": gran, "tasks": n_tasks,
+            "wall_s": dt, "tasks_per_s": n_tasks / dt}
+
+
+def sweep(configs: dict, benches=None, grans=GRANULARITIES, n_workers=3,
+          repeats=3):
+    """Returns rows + per-(bench,gran) efficiency vs the best config."""
+    benches = benches or list(BENCHMARKS)
+    rows = []
+    for bench in benches:
+        for gran in grans:
+            best = 0.0
+            got = {}
+            for name, kw in configs.items():
+                r = run_one(bench, gran, kw, n_workers, repeats)
+                got[name] = r
+                best = max(best, r["tasks_per_s"])
+            for name, r in got.items():
+                r["config"] = name
+                r["efficiency"] = r["tasks_per_s"] / best if best else 0.0
+                rows.append(r)
+    return rows
+
+
+# ---------------------------------------------------------------- locks
+def locks_micro(n_threads=4, n_tasks=4000, cs_work=40) -> dict:
+    """Task-serving throughput through each lock design (the scheduler
+    critical section = deque pop + policy work of ~cs_work ops).
+
+    sys.setswitchinterval is lowered so the single-core GIL preempts inside
+    critical sections the way true parallelism would interleave them —
+    otherwise no waiter ever queues and delegation never engages."""
+    import sys
+    from collections import deque
+    out = {}
+    old_si = sys.getswitchinterval()
+    sys.setswitchinterval(5e-6)
+
+    def policy_work():
+        s = 0
+        for i in range(cs_work):  # stand-in for scheduling policy logic
+            s += i
+        return s
+
+    def measure_lock(lock_cls):
+        lk = lock_cls(64)
+        q = deque(range(n_tasks))
+        got = []
+
+        def worker(wid):
+            while True:
+                lk.lock()
+                policy_work()
+                item = q.popleft() if q else None
+                lk.unlock()
+                if item is None:
+                    return
+                got.append(item)
+
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=worker, args=(w,))
+              for w in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert len(got) == n_tasks
+        return n_tasks / dt
+
+    def measure_dtlock_delegation():
+        lk = DTLock(64)
+        q = deque(range(n_tasks))
+        got = []
+        entries = [0]  # critical-section entries (lock ownerships)
+        served = [0]   # items handed to waiters without a CS entry
+
+        def worker(wid):
+            while True:
+                acquired, item = lk.lock_or_delegate(wid)
+                if not acquired:
+                    if item is None:
+                        return
+                    got.append(item)
+                    continue
+                entries[0] += 1
+                policy_work()
+                # owner: serve waiters then self (one policy_work per serve
+                # — same per-task policy cost as the other designs)
+                while not lk.empty():
+                    wid2 = lk.front()
+                    policy_work()
+                    lk.set_item(wid2, q.popleft() if q else None)
+                    lk.pop_front()
+                    served[0] += 1
+                item = q.popleft() if q else None
+                lk.unlock()
+                if item is None:
+                    return
+                got.append(item)
+
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=worker, args=(w,))
+              for w in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert len(got) == n_tasks, len(got)
+        return n_tasks / dt, (n_tasks / max(entries[0], 1))
+
+    try:
+        out["mutex"] = measure_lock(MutexLock)
+        out["ticket"] = measure_lock(TicketLock)
+        out["ptlock"] = measure_lock(PTLock)
+        tps, batching = measure_dtlock_delegation()
+        out["dtlock(delegation)"] = tps
+        out["dtlock_tasks_per_cs_entry"] = batching
+    finally:
+        sys.setswitchinterval(old_si)
+    return out
+
+
+def insertion_micro(n_items=30_000, contended=True) -> dict:
+    """Producer-side insertion cost: SPSC push (wait-free) vs PTLock-guarded
+    shared-queue insert. The paper's §3.1 point is that the task CREATOR must
+    not pay for consumer contention, so we measure the creator's cost while
+    consumer threads hammer the shared structure."""
+    from collections import deque
+    out = {}
+    stop = threading.Event()
+
+    def run_consumers(target, n=2):
+        ts = [threading.Thread(target=target) for _ in range(n)]
+        for t in ts:
+            t.start()
+        return ts
+
+    # --- locked insert: consumers contend on the SAME lock (get-side) ---
+    lk = PTLock(64)
+    q: deque = deque()
+
+    def locked_consumer():
+        while not stop.is_set():
+            lk.lock()
+            _ = q.popleft() if q else None
+            lk.unlock()
+
+    consumers = run_consumers(locked_consumer) if contended else []
+    t0 = time.perf_counter()
+    for i in range(n_items):
+        lk.lock()
+        q.append(i)
+        lk.unlock()
+    out["locked-insert"] = n_items / (time.perf_counter() - t0)
+    stop.set()
+    for t in consumers:
+        t.join(timeout=10)
+
+    # --- SPSC insert: producer never touches the consumers' lock ---
+    stop.clear()
+    spsc = SPSCQueue(n_items + 1)  # ample: measure pure producer cost
+    sink: deque = deque()
+    lk2 = PTLock(64)
+
+    def spsc_consumer():
+        # consumers churn on their own lock (scheduler side), not the SPSC
+        while not stop.is_set():
+            lk2.lock()
+            _ = sink.popleft() if sink else None
+            lk2.unlock()
+
+    consumers = run_consumers(spsc_consumer) if contended else []
+    t0 = time.perf_counter()
+    for i in range(n_items):
+        spsc.push(i)
+    out["spsc-insert"] = n_items / (time.perf_counter() - t0)
+    stop.set()
+    for t in consumers:
+        t.join(timeout=10)
+    return out

@@ -1,0 +1,110 @@
+"""Benchmark entrypoint — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus roofline summary rows).
+
+  figs4-6   efficiency vs granularity, optimization ablations
+  figs7-9   runtime comparison (delegation vs work-stealing vs global lock)
+  locks     §3.4 lock microbenchmark (DTLock vs PTLock claim: ~4x)
+  insertion §3.1 SPSC vs locked insertion (claim: ~12x)
+  roofline  §Roofline terms per (arch x shape), from the dry-run artifacts
+
+FAST=1 (default) uses reduced sizes; FAST=0 runs the full sweep.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+FAST = os.environ.get("FAST", "1") == "1"
+
+
+def _emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def table_variants():
+    """Figs 4-6: per-benchmark efficiency for each removed optimization."""
+    from benchmarks.bench_runtime import VARIANTS, sweep
+    benches = ["dotprod", "heat", "cholesky", "miniamr"] if FAST else None
+    grans = ("fine", "coarse") if FAST else ("fine", "medium", "coarse")
+    rows = sweep(VARIANTS, benches=benches, grans=grans,
+                 repeats=2 if FAST else 5)
+    for r in rows:
+        us = 1e6 / r["tasks_per_s"]
+        _emit(f"fig4.{r['bench']}.{r['gran']}.{r['config']}", us,
+              f"eff={r['efficiency']:.3f}")
+    return rows
+
+
+def table_runtimes():
+    """Figs 7-9: delegation runtime vs baselines."""
+    from benchmarks.bench_runtime import RUNTIMES, sweep
+    benches = ["dotprod", "spmv", "nbody", "matmul"] if FAST else None
+    grans = ("fine", "coarse") if FAST else ("fine", "medium", "coarse")
+    rows = sweep(RUNTIMES, benches=benches, grans=grans,
+                 repeats=2 if FAST else 5)
+    for r in rows:
+        us = 1e6 / r["tasks_per_s"]
+        _emit(f"fig7.{r['bench']}.{r['gran']}.{r['config']}", us,
+              f"eff={r['efficiency']:.3f}")
+    return rows
+
+
+def table_locks():
+    from benchmarks.bench_runtime import locks_micro
+    res = locks_micro(n_threads=4, n_tasks=2000 if FAST else 8000)
+    base = res["ptlock"]
+    batching = res.pop("dtlock_tasks_per_cs_entry", None)
+    for name, tps in res.items():
+        extra = ""
+        if name.startswith("dtlock") and batching is not None:
+            extra = f";tasks_per_cs_entry={batching:.3f}"
+        _emit(f"locks.{name}", 1e6 / tps,
+              f"speedup_vs_ptlock={tps / base:.2f}x{extra}")
+    return res
+
+
+def table_insertion():
+    from benchmarks.bench_runtime import insertion_micro
+    res = insertion_micro(n_items=10_000 if FAST else 50_000)
+    base = res["locked-insert"]
+    for name, tps in res.items():
+        _emit(f"insertion.{name}", 1e6 / tps,
+              f"speedup_vs_locked={tps / base:.2f}x")
+    return res
+
+
+def table_roofline():
+    from benchmarks.roofline import interesting_cells, load
+    rows = load()
+    ok = [r for r in rows if "skipped" not in r]
+    if not ok:
+        print("roofline,0,run scripts/run_dryruns.sh first", flush=True)
+        return []
+    for r in ok:
+        if r["mesh"] != "single":
+            continue
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        _emit(f"roofline.{r['arch']}.{r['shape']}", bound_s * 1e6,
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.4f};"
+              f"useful={r['useful_ratio']:.3f}")
+    cells = interesting_cells(rows)
+    for k, r in cells.items():
+        _emit(f"roofline.pick.{k}", 0.0, f"{r['arch']}x{r['shape']}")
+    return rows
+
+
+def main() -> None:
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    table_locks()
+    table_insertion()
+    table_variants()
+    table_runtimes()
+    table_roofline()
+    print(f"# total {time.time() - t0:.1f}s fast={FAST}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

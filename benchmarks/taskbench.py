@@ -1,0 +1,226 @@
+"""Task-graph benchmarks mirroring the paper's §6.1 suite.
+
+Each builder spawns a dependency-rich task graph on a TaskRuntime and returns
+the number of tasks created. Granularity is controlled by the per-task block
+size (numpy work), exactly like the paper's instructions-per-task axis.
+
+dotprod   blocked dot product with a task reduction on the accumulator
+matmul    blocked C += A@B, per-(i,j) RW chains over k
+heat      Gauss-Seidel wavefront over a blocked 2D grid (RW + neighbor reads)
+cholesky  blocked right-looking Cholesky (potrf/trsm/syrk/gemm dag)
+nbody     force blocks (reads positions) then per-block integrations
+spmv      block-sparse y += A x with reductions on y blocks (HPCCG-like)
+miniamr   two-level refinement: coarse stencil + refined sub-block tasks
+          feeding back into their parent (nested creators, irregular sizes)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dotprod(rt, nblocks=64, block=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = [rng.standard_normal(block) for _ in range(nblocks)]
+    ys = [rng.standard_normal(block) for _ in range(nblocks)]
+    acc = np.zeros(1)
+
+    def part(i):
+        acc[0] += float(xs[i] @ ys[i])  # GIL-serialized += (safe)
+
+    for i in range(nblocks):
+        rt.spawn(part, (i,), reads=[("x", i), ("y", i)],
+                 reductions=[("acc", "+")])
+    rt.spawn(lambda: None, reads=["acc"])
+    return nblocks + 1
+
+
+def matmul(rt, nb=4, block=48, seed=0):
+    rng = np.random.default_rng(seed)
+    A = [[rng.standard_normal((block, block)) for _ in range(nb)]
+         for _ in range(nb)]
+    B = [[rng.standard_normal((block, block)) for _ in range(nb)]
+         for _ in range(nb)]
+    C = [[np.zeros((block, block)) for _ in range(nb)] for _ in range(nb)]
+    n = 0
+    for i in range(nb):
+        for j in range(nb):
+            for k in range(nb):
+                def gemm(i=i, j=j, k=k):
+                    C[i][j] += A[i][k] @ B[k][j]
+                rt.spawn(gemm, reads=[("A", i, k), ("B", k, j)],
+                         rw=[("C", i, j)])
+                n += 1
+    return n
+
+
+def heat(rt, nb=6, block=64, iters=3, seed=0):
+    rng = np.random.default_rng(seed)
+    grid = [[rng.standard_normal((block, block)) for _ in range(nb)]
+            for _ in range(nb)]
+    n = 0
+    for _ in range(iters):
+        for i in range(nb):
+            for j in range(nb):
+                deps = []
+                if i > 0:
+                    deps.append(("g", i - 1, j))
+                if j > 0:
+                    deps.append(("g", i, j - 1))
+
+                def relax(i=i, j=j):
+                    g = grid[i][j]
+                    g[1:-1, 1:-1] = 0.25 * (g[:-2, 1:-1] + g[2:, 1:-1] +
+                                            g[1:-1, :-2] + g[1:-1, 2:])
+                rt.spawn(relax, reads=deps, rw=[("g", i, j)])
+                n += 1
+    return n
+
+
+def cholesky(rt, nb=4, block=48, seed=0):
+    rng = np.random.default_rng(seed)
+    M = rng.standard_normal((nb * block, nb * block))
+    M = M @ M.T + nb * block * np.eye(nb * block)
+    Ablk = [[M[i * block:(i + 1) * block, j * block:(j + 1) * block].copy()
+             for j in range(nb)] for i in range(nb)]
+    n = 0
+    for k in range(nb):
+        def potrf(k=k):
+            Ablk[k][k] = np.linalg.cholesky(Ablk[k][k])
+        rt.spawn(potrf, rw=[("A", k, k)])
+        n += 1
+        for i in range(k + 1, nb):
+            def trsm(i=i, k=k):
+                L = Ablk[k][k]
+                Ablk[i][k] = np.linalg.solve(L, Ablk[i][k].T).T
+            rt.spawn(trsm, reads=[("A", k, k)], rw=[("A", i, k)])
+            n += 1
+        for i in range(k + 1, nb):
+            for j in range(k + 1, i + 1):
+                def upd(i=i, j=j, k=k):
+                    Ablk[i][j] -= Ablk[i][k] @ Ablk[j][k].T
+                rt.spawn(upd, reads=[("A", i, k), ("A", j, k)],
+                         rw=[("A", i, j)])
+                n += 1
+    return n
+
+
+def nbody(rt, nblocks=12, per=64, steps=2, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = [rng.standard_normal((per, 3)) for _ in range(nblocks)]
+    frc = [np.zeros((per, 3)) for _ in range(nblocks)]
+    n = 0
+    for _ in range(steps):
+        for i in range(nblocks):
+            def zero(i=i):
+                frc[i][:] = 0
+            rt.spawn(zero, rw=[("f", i)])
+            n += 1
+        for i in range(nblocks):
+            for j in range(nblocks):
+                def force(i=i, j=j):
+                    d = pos[i][:, None, :] - pos[j][None, :, :]
+                    r2 = (d * d).sum(-1) + 1e-3
+                    frc[i] += (d / r2[..., None] ** 1.5).sum(1)
+                rt.spawn(force, reads=[("p", i), ("p", j)],
+                         reductions=[(("f", i), "+")])
+                n += 1
+        for i in range(nblocks):
+            def integrate(i=i):
+                pos[i] += 1e-4 * frc[i]
+            rt.spawn(integrate, reads=[("f", i)], rw=[("p", i)])
+            n += 1
+    return n
+
+
+def spmv(rt, nb=16, block=256, density=0.3, iters=2, seed=0):
+    rng = np.random.default_rng(seed)
+    blocks = {}
+    for i in range(nb):
+        for j in range(nb):
+            if rng.random() < density or i == j:
+                blocks[(i, j)] = rng.standard_normal((block, block))
+    x = [rng.standard_normal(block) for _ in range(nb)]
+    y = [np.zeros(block) for _ in range(nb)]
+    n = 0
+    for _ in range(iters):
+        for (i, j), A in blocks.items():
+            def mv(i=i, j=j, A=A):
+                y[i] += A @ x[j]
+            rt.spawn(mv, reads=[("x", j)], reductions=[(("y", i), "+")])
+            n += 1
+        for i in range(nb):
+            def norm(i=i):
+                s = np.linalg.norm(y[i]) + 1e-9
+                x[i] = y[i] / s
+                y[i][:] = 0
+            rt.spawn(norm, reads=[], rw=[("x", i), ("y", i)])
+            n += 1
+    return n
+
+
+def miniamr(rt, nb=4, block=32, refine_every=2, seed=0):
+    """Two-level AMR-like pattern: coarse stencil tasks; every Nth block
+    spawns refined child tasks (nested creators) that feed the parent."""
+    rng = np.random.default_rng(seed)
+    coarse = [[rng.standard_normal((block, block)) for _ in range(nb)]
+              for _ in range(nb)]
+    n = 0
+    for i in range(nb):
+        for j in range(nb):
+            refined = (i * nb + j) % refine_every == 0
+
+            def step(i=i, j=j, refined=refined):
+                g = coarse[i][j]
+                g *= 0.99
+                if refined:
+                    fine = [g[:block // 2, :block // 2],
+                            g[block // 2:, block // 2:]]
+
+                    def child(k):
+                        fine[k] @ fine[k].T  # noqa: B018 — work
+
+                    for k in range(2):
+                        rt.spawn(child, (k,), reads=[("c", i, j)])
+            rt.spawn(step, rw=[("c", i, j)])
+            n += 1 + (2 if refined else 0)
+    return n
+
+
+BENCHMARKS = {
+    "dotprod": dotprod,
+    "matmul": matmul,
+    "heat": heat,
+    "cholesky": cholesky,
+    "nbody": nbody,
+    "spmv": spmv,
+    "miniamr": miniamr,
+}
+
+
+def granularity_kwargs(name: str, gran: str) -> dict:
+    """gran in {fine, medium, coarse}: scales per-task work, constant-ish
+    total problem (the paper's efficiency-vs-granularity axis)."""
+    table = {
+        "dotprod": {"fine": dict(nblocks=256, block=256),
+                    "medium": dict(nblocks=64, block=1024),
+                    "coarse": dict(nblocks=16, block=4096)},
+        "matmul": {"fine": dict(nb=8, block=16),
+                   "medium": dict(nb=4, block=32),
+                   "coarse": dict(nb=2, block=64)},
+        "heat": {"fine": dict(nb=8, block=32, iters=3),
+                 "medium": dict(nb=4, block=64, iters=3),
+                 "coarse": dict(nb=2, block=128, iters=3)},
+        "cholesky": {"fine": dict(nb=8, block=16),
+                     "medium": dict(nb=4, block=32),
+                     "coarse": dict(nb=2, block=64)},
+        "nbody": {"fine": dict(nblocks=24, per=16, steps=2),
+                  "medium": dict(nblocks=12, per=32, steps=2),
+                  "coarse": dict(nblocks=6, per=64, steps=2)},
+        "spmv": {"fine": dict(nb=24, block=64, iters=2),
+                 "medium": dict(nb=12, block=128, iters=2),
+                 "coarse": dict(nb=6, block=256, iters=2)},
+        "miniamr": {"fine": dict(nb=8, block=16),
+                    "medium": dict(nb=4, block=32),
+                    "coarse": dict(nb=2, block=64)},
+    }
+    return table[name][gran]

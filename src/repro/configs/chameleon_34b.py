@@ -1,0 +1,41 @@
+"""Chameleon-34B [arXiv:2405.09818]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early-fusion VLM; image VQ tokens share the text vocab, so the
+backbone is a plain GQA decoder; the VQ tokenizer frontend is a STUB
+(input_specs provides token ids directly). qk-norm per the published model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon_34b",
+    family="dense",
+    n_layers=48,
+    d_model=8192,
+    vocab_size=65536,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=10_000.0,
+    d_ff=22016,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+    train_microbatches=16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="chameleon_34b_smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    qk_norm=True,
+    d_ff=160,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+)

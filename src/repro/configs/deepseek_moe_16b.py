@@ -1,0 +1,44 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066]: 28L d_model=2048 16H (GQA kv=16) vocab=102400,
+fine-grained MoE: 2 shared + 64 routed experts top-6, expert d_ff=1408."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek_moe_16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    vocab_size=102400,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    rope_theta=10_000.0,
+    d_ff=1408,
+    n_routed_experts=64,
+    n_shared_experts=2,
+    moe_top_k=6,
+    moe_d_ff=1408,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="deepseek_moe_16b_smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=96,
+    n_routed_experts=8,
+    n_shared_experts=2,
+    moe_top_k=2,
+    moe_d_ff=96,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+)

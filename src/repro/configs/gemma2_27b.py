@@ -1,0 +1,45 @@
+"""Gemma2-27B [arXiv:2408.00118]: 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000 — alternating local(4096)/global attention, attn+final logit softcap,
+GeGLU. head_dim=4608/32=144 per assignment note (published uses 128; see DESIGN.md)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2_27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    vocab_size=256000,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=144,
+    rope_theta=10_000.0,
+    sliding_window=4096,
+    local_global_period=2,  # odd layers local, even layers global
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    d_ff=36864,
+    mlp_gated=True,
+    mlp_act="gelu",
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    train_microbatches=8,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="gemma2_27b_smoke",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    sliding_window=8,
+    local_global_period=2,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    d_ff=192,
+    mlp_gated=True,
+    mlp_act="gelu",
+    norm_type="rmsnorm",
+)

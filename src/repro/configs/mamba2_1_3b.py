@@ -1,0 +1,35 @@
+"""Mamba2-1.3B [arXiv:2405.21060]: 48L d_model=2048 attention-free, SSD
+(state-space duality), ssm_state=128, expand=2 (d_inner=4096), head_dim=64,
+vocab=50280 (padded to 50432 for TP divisibility; padding masked in loss)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2_1_3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    vocab_size=50280,
+    d_ff=0,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="mamba2_1_3b_smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    d_ff=0,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_conv_width=4,
+    ssm_chunk=32,
+    norm_type="rmsnorm",
+)

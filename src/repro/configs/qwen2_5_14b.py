@@ -1,0 +1,39 @@
+"""Qwen2.5-14B [hf:Qwen/Qwen2.5-*]: 48L d_model=5120 40H (GQA kv=8) d_ff=13824
+vocab=152064 — GQA with QKV bias, SwiGLU, RMSNorm."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2_5_14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    vocab_size=152064,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    d_ff=13824,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+    train_microbatches=16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen2_5_14b_smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    qkv_bias=True,
+    d_ff=160,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+)

@@ -1,0 +1,46 @@
+"""Qwen2-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B]: 24L d_model=2048 16H (GQA kv=16)
+vocab=151936, MoE: 4 shared + 60 routed experts top-4, expert d_ff=1408."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2_moe_a2_7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    vocab_size=151936,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    d_ff=1408,
+    n_routed_experts=60,
+    n_shared_experts=4,
+    moe_top_k=4,
+    moe_d_ff=1408,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen2_moe_a2_7b_smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    qkv_bias=True,
+    d_ff=96,
+    n_routed_experts=6,
+    n_shared_experts=2,
+    moe_top_k=2,
+    moe_d_ff=96,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=False,
+)

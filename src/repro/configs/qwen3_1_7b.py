@@ -1,0 +1,37 @@
+"""Qwen3-1.7B [hf:Qwen/Qwen3-*]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936 — qk-norm (RMSNorm on q,k heads), GQA, SwiGLU, no qkv bias."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3_1_7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    vocab_size=151936,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    d_ff=6144,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen3_1_7b_smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    qk_norm=True,
+    d_ff=160,
+    mlp_gated=True,
+    mlp_act="silu",
+    norm_type="rmsnorm",
+)

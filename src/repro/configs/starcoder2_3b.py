@@ -1,0 +1,41 @@
+"""StarCoder2-3B [arXiv:2402.19173]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE, sliding-window-capable (4096), non-gated GELU MLP."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2_3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    vocab_size=49152,
+    n_heads=24,
+    n_kv_heads=2,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=999_999.0,
+    sliding_window=4096,
+    local_global_period=0,  # starcoder2-3b uses full attention in released config
+    d_ff=12288,
+    mlp_gated=False,
+    mlp_act="gelu",
+    norm_type="layernorm",
+    tie_embeddings=True,
+    train_microbatches=8,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="starcoder2_3b_smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    qkv_bias=True,
+    rope_theta=999_999.0,
+    d_ff=128,
+    mlp_gated=False,
+    mlp_act="gelu",
+    norm_type="layernorm",
+)

@@ -1,0 +1,43 @@
+"""Whisper-tiny [arXiv:2212.04356]: enc-dec, 4+4L d_model=384 6H d_ff=1536
+vocab=51865 (padded to 51968) — conv audio frontend is a STUB: input_specs
+provides precomputed frame embeddings (batch, seq//4, d_model)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper_tiny",
+    family="encdec",
+    n_layers=4,          # decoder layers
+    encoder_layers=4,
+    encoder_frames_ratio=4,
+    d_model=384,
+    vocab_size=51865,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    qkv_bias=True,
+    rope_theta=0.0,       # whisper uses learned/sinusoidal positions; we use rope_theta=0 => sinusoidal
+    d_ff=1536,
+    mlp_gated=False,
+    mlp_act="gelu",
+    norm_type="layernorm",
+    tie_embeddings=True,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="whisper_tiny_smoke",
+    family="encdec",
+    n_layers=2,
+    encoder_layers=2,
+    encoder_frames_ratio=4,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    qkv_bias=True,
+    rope_theta=0.0,
+    d_ff=128,
+    mlp_gated=False,
+    mlp_act="gelu",
+    norm_type="layernorm",
+)

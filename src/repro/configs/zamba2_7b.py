@@ -1,0 +1,50 @@
+"""Zamba2-7B [arXiv:2411.15242]: 81L d_model=3584 hybrid — Mamba2 backbone
+(ssm_state=64) with a SHARED-parameter attention block (32H, kv=32, d_ff=14336)
+applied every 6 SSM layers. vocab=32000. Published model adds per-application
+LoRA deltas on the shared block; we share parameters exactly (see DESIGN.md)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2_7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    vocab_size=32000,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    rope_theta=10_000.0,
+    d_ff=14336,
+    mlp_gated=True,
+    mlp_act="gelu",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    hybrid_attn_period=6,
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    train_microbatches=16,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="zamba2_7b_smoke",
+    family="hybrid",
+    n_layers=7,
+    d_model=64,
+    vocab_size=512,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    mlp_gated=True,
+    mlp_act="gelu",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_conv_width=4,
+    ssm_chunk=16,
+    hybrid_attn_period=3,
+    norm_type="rmsnorm",
+)

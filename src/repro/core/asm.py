@@ -1,0 +1,266 @@
+"""Atomic State Machine (ASM) wait-free dependency system (paper §2).
+
+Each task dependency is a DataAccess whose ``flags`` word is a finite state
+machine mutated ONLY by message deliveries: ``flags.fetch_or(message)``.
+Flags are monotone (bits only ever set), every message is non-empty and — by
+construction, each bit has a unique sender — disjoint from already-set flags,
+so an access receives at most |F| messages and a delivery retries at most |F|
+times: the wait-freedom argument of paper §2.3 carries over verbatim.
+
+State bits
+----------
+READ_SAT      predecessors permit concurrent read
+WRITE_SAT     every predecessor fully complete (exclusive access ok)
+RED_SAT       same-operator reduction predecessor chain is ready
+TASK_DONE     owning task body finished (unregister delivered)
+CHILD_DONE    all child-domain accesses complete (set with TASK_DONE when no
+              children ever linked — safe: children are only created by the
+              owning task, which has finished)
+SUCC_LINKED   successor pointer written (registrar of the successor delivers)
+SUCC_IS_RED   successor is a same-op reduction (known at link time)
+CHILD_LINKED  first child-domain access linked
+PARENT_WAIT   parent finished and waits on this (tail) access
+ACK_*         delivery notifications (paper's flagsAfterPropagation), used
+              for safe-deletion accounting and boundedness tests
+
+Transition rules (fire exactly once, on the delivery that completes the set):
+ R_ready   READ/RED: {READ_SAT} or {RED_SAT}; WRITE/RW/COMM: {READ_SAT,WRITE_SAT}
+ R_read    read-like & {READ_SAT, SUCC_LINKED}          -> READ_SAT to succ
+ R_red     reduction ready & {SUCC_LINKED, SUCC_IS_RED} -> RED_SAT to succ
+ R_full    {READ_SAT,WRITE_SAT,TASK_DONE,CHILD_DONE,SUCC_LINKED}
+           -> WRITE_SAT (+READ_SAT unless read-like already forwarded) to succ
+ R_child_r {CHILD_LINKED, READ_SAT}                     -> READ_SAT to child
+ R_child_w {CHILD_LINKED, READ_SAT, WRITE_SAT}          -> WRITE_SAT to child
+ R_parent  {READ_SAT,WRITE_SAT,TASK_DONE,CHILD_DONE,PARENT_WAIT}
+           -> decrement parent's pending-children; last delivers CHILD_DONE
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, List, Optional
+
+from repro.core.atomic import AtomicRef, AtomicU64
+
+# access types
+READ, WRITE, READWRITE, REDUCTION, COMMUTATIVE = range(5)
+_READ_LIKE = (READ, REDUCTION)
+
+# flag bits
+READ_SAT = 1 << 0
+WRITE_SAT = 1 << 1
+RED_SAT = 1 << 2
+TASK_DONE = 1 << 3
+CHILD_DONE = 1 << 4
+SUCC_LINKED = 1 << 5
+SUCC_IS_RED = 1 << 6
+CHILD_LINKED = 1 << 7
+PARENT_WAIT = 1 << 8
+ACK_SUCC = 1 << 9
+ACK_CHILD = 1 << 10
+ACK_PARENT = 1 << 11
+N_FLAGS = 12
+
+_FULL = READ_SAT | WRITE_SAT | TASK_DONE | CHILD_DONE
+
+
+class DataAccess:
+    __slots__ = ("address", "atype", "red_op", "flags", "successor", "child",
+                 "task", "parent_access", "children_pending", "deliveries")
+
+    def __init__(self, address, atype: int, task, red_op=None):
+        self.address = address
+        self.atype = atype
+        self.red_op = red_op
+        self.flags = AtomicU64(0)
+        self.successor: Optional[DataAccess] = None
+        self.child: Optional[DataAccess] = None
+        self.task = task
+        self.parent_access: Optional[DataAccess] = None
+        self.children_pending = AtomicU64(0)
+        self.deliveries = AtomicU64(0)  # boundedness accounting (<= |F|)
+
+    @property
+    def read_like(self) -> bool:
+        return self.atype in _READ_LIKE
+
+    def ready_bits_options(self):
+        if self.atype == READ:
+            return (READ_SAT,)
+        if self.atype == REDUCTION:
+            # exclusive rights, OR joining a same-op reduction group
+            return (READ_SAT | WRITE_SAT, RED_SAT)
+        return (READ_SAT | WRITE_SAT,)
+
+    def __repr__(self):
+        return (f"DataAccess({self.address!r}, t={self.atype}, "
+                f"flags={self.flags.load():#x})")
+
+
+class DataAccessMessage:
+    __slots__ = ("flags_for_next", "flags_after_propagation", "from_", "to")
+
+    def __init__(self, to: DataAccess, flags_for_next: int,
+                 from_: Optional[DataAccess] = None,
+                 flags_after_propagation: int = 0):
+        self.to = to
+        self.flags_for_next = flags_for_next
+        self.from_ = from_
+        self.flags_after_propagation = flags_after_propagation
+
+
+class MailBox:
+    """Per-thread message queue (paper Fig. 2). deliver_all drains until
+    quiescent; each delivery is one fetch_or + rule evaluation."""
+
+    __slots__ = ("_q", "on_ready")
+
+    def __init__(self, on_ready: Callable):
+        self._q: deque = deque()
+        self.on_ready = on_ready  # callback(access) when access satisfied
+
+    def post(self, msg: DataAccessMessage):
+        self._q.append(msg)
+
+    def deliver_all(self):
+        q = self._q
+        while q:
+            msg = q.popleft()
+            self._deliver(msg)
+
+    # ------------------------------------------------------------------
+    def _deliver(self, msg: DataAccessMessage):
+        a = msg.to
+        old = a.flags.fetch_or(msg.flags_for_next)
+        new = old | msg.flags_for_next
+        a.deliveries.fetch_add(1)
+        if new != old:
+            self._transitions(a, old, new)
+        if msg.from_ is not None and msg.flags_after_propagation:
+            f = msg.from_
+            fold = f.flags.fetch_or(msg.flags_after_propagation)
+            # acks never trigger rules (no rule contains ACK bits)
+
+    def _transitions(self, a: DataAccess, old: int, new: int):
+        def crossed(bits: int) -> bool:
+            return (new & bits) == bits and (old & bits) != bits
+
+        # R_ready
+        for rb in a.ready_bits_options():
+            if crossed(rb):
+                # a second option crossing later must not re-fire
+                others = [b for b in a.ready_bits_options() if b != rb]
+                if not any((old & b) == b for b in others):
+                    self.on_ready(a)
+                break
+
+        # R_read: plain reads forward read permission down the chain early
+        # (reductions do NOT: their privatized writes exclude plain readers)
+        if a.atype == READ and crossed(READ_SAT | SUCC_LINKED):
+            self.post(DataAccessMessage(a.successor, READ_SAT, a, 0))
+
+        # R_red: same-op reduction chain forwards reduction readiness
+        if a.atype == REDUCTION and (new & SUCC_IS_RED):
+            for rb in a.ready_bits_options():
+                if crossed(rb | SUCC_LINKED | SUCC_IS_RED):
+                    others = [b | SUCC_LINKED | SUCC_IS_RED
+                              for b in a.ready_bits_options() if b != rb]
+                    if not any((old & b) == b for b in others):
+                        self.post(DataAccessMessage(a.successor, RED_SAT, a, 0))
+                    break
+
+        # R_full: completion forwards full satisfiability to the successor
+        if crossed(_FULL | SUCC_LINKED):
+            # plain READ already forwarded READ_SAT via R_read (its
+            # precondition is implied here), so only WRITE_SAT remains
+            fwd = WRITE_SAT if a.atype == READ else (READ_SAT | WRITE_SAT)
+            self.post(DataAccessMessage(a.successor, fwd, a, ACK_SUCC))
+
+        # R_child: child domain inherits what the parent access holds
+        if crossed(CHILD_LINKED | READ_SAT):
+            self.post(DataAccessMessage(a.child, READ_SAT, a, 0))
+        if crossed(CHILD_LINKED | READ_SAT | WRITE_SAT):
+            self.post(DataAccessMessage(a.child, WRITE_SAT, a, ACK_CHILD))
+
+        # R_parent: tail access completion notifies the waiting parent
+        if crossed(_FULL | PARENT_WAIT):
+            p = a.parent_access
+            if p is not None and p.children_pending.fetch_add(-1) == 1:
+                self.post(DataAccessMessage(p, CHILD_DONE, a, ACK_PARENT))
+
+
+class WaitFreeDependencySystem:
+    """Lineage bookkeeping + ASM message generation (register/unregister).
+
+    A lineage is the per-(domain, address) chain of sibling accesses; the
+    domain is the parent task (None = root). The lineage head of a child
+    domain hangs off the parent's access to the same address via ``child``.
+    """
+
+    name = "waitfree"
+
+    def __init__(self):
+        self._lineages: dict = {}  # (domain_id, address) -> AtomicRef(last)
+        self._lineages_lock = None  # dict ops are GIL-atomic; setdefault safe
+
+    def _lineage(self, domain, address) -> AtomicRef:
+        key = (id(domain) if domain is not None else 0, address)
+        ref = self._lineages.get(key)
+        if ref is None:
+            ref = self._lineages.setdefault(key, AtomicRef(None))
+        return ref
+
+    # ------------------------------------------------------------------
+    def register_task(self, task, mailbox: MailBox):
+        """Create + link accesses; post initial messages; returns when the
+        task's readiness accounting is armed (task may become ready inside)."""
+        parent = task.parent
+        for acc in task.accesses:
+            prev = self._lineage(parent, acc.address).swap(acc)
+            if prev is not None:
+                # sibling successor link: written once by this registrar
+                prev.successor = acc
+                bits = SUCC_LINKED
+                if (acc.atype == REDUCTION and prev.atype == REDUCTION
+                        and acc.red_op == prev.red_op):
+                    bits |= SUCC_IS_RED
+                mailbox.post(DataAccessMessage(prev, bits, acc, 0))
+            elif parent is not None and parent.access_for(acc.address) is not None:
+                # head of a child-domain lineage: hang off the parent access
+                pacc = parent.access_for(acc.address)
+                acc.parent_access = pacc
+                pacc.child = acc
+                pacc.children_pending.fetch_add(1)
+                mailbox.post(DataAccessMessage(pacc, CHILD_LINKED, acc, 0))
+            else:
+                # fresh root lineage: immediately fully satisfied
+                mailbox.post(DataAccessMessage(acc, READ_SAT | WRITE_SAT,
+                                               None, 0))
+            if acc.parent_access is None and parent is not None:
+                # non-head child accesses still notify through the chain; the
+                # tail's parent_access is set at parent unregister time.
+                pass
+        mailbox.deliver_all()
+        task.registration_done()
+
+    def unregister_task(self, task, mailbox: MailBox):
+        for acc in task.accesses:
+            flags = TASK_DONE
+            if not (acc.flags.load() & CHILD_LINKED):
+                # no children were ever created (task body has finished, so
+                # none can appear): complete the child side too
+                flags |= CHILD_DONE
+            mailbox.post(DataAccessMessage(acc, flags, None, 0))
+        # close child-domain lineages: tell each tail to notify this task's
+        # access when it completes
+        for acc in task.accesses:
+            if acc.flags.load() & CHILD_LINKED:
+                ref = self._lineage(task, acc.address)
+                tail = ref.load()
+                if tail is not None:
+                    tail.parent_access = acc
+                    mailbox.post(DataAccessMessage(tail, PARENT_WAIT, acc, 0))
+        mailbox.deliver_all()
+
+
+def max_deliveries(task) -> int:
+    return max((a.deliveries.load() for a in task.accesses), default=0)

@@ -1,0 +1,76 @@
+"""Atomic primitives.
+
+CPython has no user-level hardware atomics; a tiny per-object lock emulates
+the LOCK-prefixed RMW instructions (fetch_add / fetch_or / CAS). The
+*algorithms built on top* (ASM dependency system, ticket locks) are the
+paper's wait-free/delegation algorithms unchanged — the lock here stands in
+for a single hardware instruction and is never held across other operations,
+so it introduces no blocking beyond what the hardware RMW would.
+
+Plain loads/stores of Python ints are atomic under the GIL (and sequentially
+consistent), matching relaxed/acquire-release loads in the C++ original.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class AtomicU64:
+    __slots__ = ("_v", "_lk")
+
+    def __init__(self, value: int = 0):
+        self._v = value
+        self._lk = threading.Lock()
+
+    def load(self) -> int:
+        return self._v
+
+    def store(self, value: int) -> None:
+        self._v = value
+
+    def fetch_add(self, delta: int = 1) -> int:
+        with self._lk:
+            v = self._v
+            self._v = v + delta
+            return v
+
+    def fetch_or(self, bits: int) -> int:
+        with self._lk:
+            v = self._v
+            self._v = v | bits
+            return v
+
+    def compare_exchange(self, expected: int, new: int) -> bool:
+        with self._lk:
+            if self._v == expected:
+                self._v = new
+                return True
+            return False
+
+    def __repr__(self):
+        return f"AtomicU64({self._v})"
+
+
+class AtomicRef:
+    """Atomic reference with swap (used for lineage last-access pointers)."""
+    __slots__ = ("_v", "_lk")
+
+    def __init__(self, value=None):
+        self._v = value
+        self._lk = threading.Lock()
+
+    def load(self):
+        return self._v
+
+    def swap(self, new):
+        with self._lk:
+            old = self._v
+            self._v = new
+            return old
+
+    def compare_exchange(self, expected, new) -> bool:
+        with self._lk:
+            if self._v is expected:
+                self._v = new
+                return True
+            return False

@@ -1,0 +1,108 @@
+"""Baseline dependency system: fine-grained locking over per-address access
+lists — the "previous implementation" the paper's wait-free design replaces
+(−waitfree ablation in the benchmarks).
+
+Semantics match the ASM system for sibling chains (RAW/WAR/WAW, concurrent
+reads, same-op reduction groups) and parent/child nesting. One lock per
+address lineage; a global lock guards the lineage table itself.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.core.asm import (COMMUTATIVE, READ, READWRITE, REDUCTION, WRITE,
+                            _READ_LIKE)
+
+
+class _Entry:
+    __slots__ = ("task", "atype", "red_op", "done", "notified")
+
+    def __init__(self, task, atype, red_op):
+        self.task = task
+        self.atype = atype
+        self.red_op = red_op
+        self.done = False
+        self.notified = False  # access_satisfied delivered
+
+
+class _Lineage:
+    __slots__ = ("lock", "entries")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.entries: list[_Entry] = []
+
+
+class LockedDependencySystem:
+    name = "locked"
+
+    def __init__(self):
+        self._table: dict = {}
+        self._table_lock = threading.Lock()
+
+    def _lineage(self, domain, address) -> _Lineage:
+        key = (id(domain) if domain is not None else 0, address)
+        lin = self._table.get(key)
+        if lin is None:
+            with self._table_lock:
+                lin = self._table.setdefault(key, _Lineage())
+        return lin
+
+    @staticmethod
+    def _compatible(prev: _Entry, entry: _Entry) -> bool:
+        if prev.atype == READ and entry.atype == READ:
+            return True
+        if (prev.atype == REDUCTION and entry.atype == REDUCTION
+                and prev.red_op == entry.red_op):
+            return True
+        return False
+
+    def _scan_ready(self, lin: _Lineage):
+        """Under lin.lock: notify every not-yet-notified entry whose
+        predecessors are all done or compatible back-to-back."""
+        newly = []
+        entries = lin.entries
+        for i, e in enumerate(entries):
+            if e.notified or e.done:
+                continue
+            ok = True
+            for p in entries[:i]:
+                if p.done:
+                    continue
+                # p is not done: e may still proceed if every entry between
+                # p..e forms a compatible (read/reduction) group
+                if not self._compatible(p, e):
+                    ok = False
+                    break
+            if ok:
+                e.notified = True
+                newly.append(e)
+        return newly
+
+    def register_task(self, task, mailbox=None):
+        notify = []
+        for acc in task.accesses:
+            lin = self._lineage(task.parent, acc.address)
+            with lin.lock:
+                e = _Entry(task, acc.atype, acc.red_op)
+                acc.successor = e  # reuse slot to find entry at unregister
+                lin.entries.append(e)
+                notify.extend(self._scan_ready(lin))
+        for e in notify:
+            e.task.access_satisfied(None)
+        task.registration_done()
+
+    def unregister_task(self, task, mailbox=None):
+        notify = []
+        for acc in task.accesses:
+            lin = self._lineage(task.parent, acc.address)
+            with lin.lock:
+                e = acc.successor
+                e.done = True
+                # prune completed prefix to bound list growth
+                while lin.entries and lin.entries[0].done:
+                    lin.entries.pop(0)
+                notify.extend(self._scan_ready(lin))
+        for e in notify:
+            e.task.access_satisfied(None)

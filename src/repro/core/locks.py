@@ -1,0 +1,168 @@
+"""Lock designs from the paper (§3.2-3.3): Ticket Lock, Partitioned Ticket
+Lock (Listing 3) and the novel Delegation Ticket Lock (Listing 4).
+
+Python port notes: u64 wraparound tricks are unnecessary (Python ints are
+unbounded); ``spin()`` yields the GIL (time.sleep(0)) because busy-waiting
+while holding the GIL would starve the lock owner — the analogue of the
+x86 ``pause`` instruction in the original.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Generic, Optional, TypeVar
+
+from repro.core.atomic import AtomicU64
+
+T = TypeVar("T")
+
+
+def spin():
+    time.sleep(0)  # yield GIL (pause-instruction analogue)
+
+
+class MutexLock:
+    """Baseline: plain mutex (pthread-style)."""
+
+    def __init__(self, size: int = 64):
+        self._lk = threading.Lock()
+
+    def lock(self):
+        self._lk.acquire()
+
+    def unlock(self):
+        self._lk.release()
+
+    def try_lock(self) -> bool:
+        return self._lk.acquire(blocking=False)
+
+
+class TicketLock:
+    """Classic ticket lock [Reed & Kanodia 1979]: fair FIFO, single word
+    busy-wait => heavy cache-line contention at scale (paper §3.2)."""
+
+    def __init__(self, size: int = 64):
+        self._next = AtomicU64(0)
+        self._serving = AtomicU64(0)
+
+    def lock(self):
+        t = self._next.fetch_add(1)
+        while self._serving.load() != t:
+            spin()
+
+    def unlock(self):
+        self._serving.store(self._serving.load() + 1)
+
+    def try_lock(self) -> bool:
+        t = self._serving.load()
+        if self._next.load() != t:
+            return False
+        if self._next.compare_exchange(t, t + 1):
+            return True
+        return False
+
+
+class PTLock:
+    """Partitioned Ticket Lock [Dice 2011] — paper Listing 3.
+
+    Each waiter spins on its own _waitq slot (distinct cache line in the
+    original), cutting coherence traffic to the minimum.
+    """
+
+    def __init__(self, size: int = 64):
+        self.size = size
+        self._head = AtomicU64(size)
+        self._tail = size + 1
+        self._waitq = [AtomicU64(size) for _ in range(size)]
+
+    def _get_ticket(self) -> int:
+        return self._head.fetch_add(1)
+
+    def _wait_turn(self, ticket: int):
+        slot = self._waitq[ticket % self.size]
+        while slot.load() < ticket:
+            spin()
+
+    def lock(self):
+        self._wait_turn(self._get_ticket())
+
+    def unlock(self):
+        idx = self._tail % self.size
+        self._waitq[idx].store(self._tail)
+        self._tail += 1
+
+    def try_lock(self) -> bool:
+        # lock is free iff _head == _tail - 1 and no waiter holds a ticket
+        expected = self._tail - 1
+        if self._head.load() != expected:
+            return False
+        if not self._head.compare_exchange(expected, expected + 1):
+            return False
+        # our ticket is `expected`; it is already released by construction
+        return True
+
+
+class _ReadySlot(Generic[T]):
+    __slots__ = ("ticket", "item")
+
+    def __init__(self):
+        self.ticket = -1
+        self.item: Optional[T] = None
+
+
+class DTLock(PTLock, Generic[T]):
+    """Delegation Ticket Lock — paper Listing 4.
+
+    Extends PTLock with a _logq registry of waiting threads and a _readyq of
+    delegated results. ``lock_or_delegate(id)`` either acquires the lock
+    (returns (True, None)) or waits until the current owner serves it an item
+    (returns (False, item)). The owner manages waiters with
+    empty()/front()/set_item()/pop_front().
+
+    Deviation from the paper's Listing 4 (documented in DESIGN.md): the
+    owner path does NOT execute ``_tail++``. The PTLock invariant is
+    ``_tail == owner_ticket + 1`` while held — that is exactly what makes
+    ``front() == _logq[_tail % Size] - _tail`` resolve to the first waiter's
+    id, and each served waiter's ticket is already consumed by popFront's
+    unlock. The extra increment in the listing as printed skips a waiting
+    ticket (starving it); tracing Figure 3 requires this corrected variant.
+    """
+
+    def __init__(self, size: int = 64):
+        super().__init__(size)
+        self._logq = [AtomicU64(0) for _ in range(size)]
+        self._readyq = [_ReadySlot() for _ in range(size)]
+
+    def lock_or_delegate(self, id_: int, default=None):
+        ticket = self._get_ticket()
+        # register: one store combining ticket and caller id (paper line 8)
+        self._logq[ticket % self.size].store(ticket + id_)
+        self._wait_turn(ticket)
+        slot = self._readyq[id_]
+        if slot.ticket != ticket:
+            # woken as the new lock owner (not served)
+            return True, default
+        return False, slot.item
+
+    # ---- owner-only operations ----
+    def empty(self) -> bool:
+        return self._logq[self._tail % self.size].load() < self._tail
+
+    def front(self) -> int:
+        return self._logq[self._tail % self.size].load() - self._tail
+
+    def set_item(self, id_: int, item: T):
+        slot = self._readyq[id_]
+        slot.item = item
+        slot.ticket = self._tail
+
+    def pop_front(self):
+        self.unlock()
+
+
+LOCK_KINDS = {
+    "mutex": MutexLock,
+    "ticket": TicketLock,
+    "ptlock": PTLock,
+    "dtlock": DTLock,
+}

@@ -1,0 +1,204 @@
+"""TaskRuntime: worker threads + pluggable scheduler + dependency system.
+
+This is the paper's runtime assembled from its components:
+  spawn()       -> pool-allocated Task, accesses registered through the
+                   (wait-free | locked) dependency system
+  worker loop   -> scheduler.get_ready_task (delegation / global-lock /
+                   work-stealing), run, unregister -> successors become ready
+  taskwait()    -> block until a task (and its children) are done
+  barrier()     -> block until the runtime is quiescent
+
+Ablation knobs mirror the paper's §6 variants:
+  deps="waitfree"|"locked", scheduler="delegation"|"global-lock"|
+  "work-stealing", use_pool=True|False.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Iterable, Optional
+
+from repro.core.asm import MailBox, WaitFreeDependencySystem
+from repro.core.atomic import AtomicU64
+from repro.core.deps_locked import LockedDependencySystem
+from repro.core.instrument import Tracer
+from repro.core.pool import TaskPool
+from repro.core.scheduler import SCHEDULER_KINDS
+from repro.core.task import DONE, Task
+
+_current_task = threading.local()
+
+
+def current_task() -> Optional[Task]:
+    return getattr(_current_task, "t", None)
+
+
+class TaskRuntime:
+    def __init__(self, n_workers: int = 4, *, scheduler: str = "delegation",
+                 deps: str = "waitfree", use_pool: bool = True,
+                 policy: str = "fifo", n_numa: int = 1,
+                 tracer: Optional[Tracer] = None,
+                 spsc_capacity: int = 256):
+        self.n_workers = n_workers
+        self.tracer = tracer or Tracer(enabled=False)
+        self.pool = TaskPool(enabled=use_pool)
+        if deps == "waitfree":
+            self.deps = WaitFreeDependencySystem()
+            self._defer_unregister = False
+        elif deps == "locked":
+            self.deps = LockedDependencySystem()
+            self._defer_unregister = True  # conservative nesting semantics
+        else:
+            raise ValueError(deps)
+        sched_cls = SCHEDULER_KINDS[scheduler]
+        kw = dict(policy=policy)
+        if scheduler == "delegation":
+            kw.update(n_numa=n_numa, spsc_capacity=spsc_capacity,
+                      instrument=self.tracer)
+        self.scheduler = sched_cls(n_workers, **kw)
+        self.scheduler_kind = scheduler
+
+        self._live = AtomicU64(0)  # created-but-not-fully-finished tasks
+        self._quiescent = threading.Event()
+        self._quiescent.set()
+        self._stop = False
+        self._threads: list[threading.Thread] = []
+        self._started = False
+        self._mailboxes = threading.local()
+        self._errors: list[BaseException] = []
+
+    # ---------------------------------------------------------------- infra
+    def _mailbox(self) -> MailBox:
+        mb = getattr(self._mailboxes, "mb", None)
+        if mb is None:
+            mb = MailBox(self._on_access_ready)
+            self._mailboxes.mb = mb
+        return mb
+
+    def _on_access_ready(self, access):
+        access.task.access_satisfied(access)
+
+    def start(self):
+        if self._started:
+            return self
+        self._started = True
+        for wid in range(self.n_workers):
+            t = threading.Thread(target=self._worker, args=(wid,),
+                                 name=f"repro-worker-{wid}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def shutdown(self, wait: bool = True):
+        if wait:
+            self.barrier()
+        self._stop = True
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads.clear()
+        self._started = False
+        if self._errors:
+            raise self._errors[0]
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.shutdown(wait=exc[0] is None)
+
+    # ---------------------------------------------------------------- spawn
+    def spawn(self, fn: Callable, args: tuple = (), kwargs=None, *,
+              name: str = "", reads: Iterable = (), writes: Iterable = (),
+              rw: Iterable = (), reductions: Iterable = (),
+              commutative: Iterable = (), affinity: Optional[int] = None,
+              parent: Optional[Task] = None, retain: bool = False) -> Task:
+        if parent is None:
+            parent = current_task()
+        task = self.pool.acquire()
+        task.init(fn, args, kwargs, name=name, parent=parent, reads=reads,
+                  writes=writes, rw=rw, reductions=reductions,
+                  commutative=commutative, affinity=affinity)
+        if retain:
+            task.pooled = False  # caller reads .result after completion
+        task.on_ready = self._task_ready
+        task.created_ns = time.monotonic_ns()
+        if self._live.fetch_add(1) == 0:
+            self._quiescent.clear()
+        if self._defer_unregister:
+            # completion token: 1 for the body + 1 per live child
+            task._live_children.store(1)
+            if parent is not None:
+                parent._live_children.fetch_add(1)
+        self.tracer.event("task.create", task.task_id)
+        self.deps.register_task(task, self._mailbox())
+        return task
+
+    def _task_ready(self, task: Task):
+        task.ready_ns = time.monotonic_ns()
+        self.tracer.event("task.ready", task.task_id)
+        if self.scheduler_kind == "work-stealing":
+            wid = getattr(_current_task, "wid", None)
+            self.scheduler.add_ready_task(task, worker_id=wid)
+        else:
+            self.scheduler.add_ready_task(
+                task, numa_hint=task.affinity or 0)
+
+    # ---------------------------------------------------------------- work
+    def _finish(self, task: Task):
+        """Called when the task body is done and, in deferred mode, the
+        completion token dropped to zero (all children fully finished)."""
+        self.deps.unregister_task(task, self._mailbox())
+        self.tracer.event("dep.unregister", task.task_id)
+        parent = task.parent
+        if task.exception is not None:
+            self._errors.append(task.exception)
+        if self._live.fetch_add(-1) == 1:
+            self._quiescent.set()
+        if parent is not None and self._defer_unregister:
+            if parent._live_children.fetch_add(-1) == 1:
+                self._finish(parent)
+        self.pool.release(task)
+
+    def _run_task(self, task: Task, wid: int):
+        _current_task.t = task
+        task.start_ns = time.monotonic_ns()
+        self.tracer.event("task.start", task.task_id)
+        task.run()
+        task.end_ns = time.monotonic_ns()
+        self.tracer.event("task.end", task.task_id)
+        _current_task.t = None
+        if self._defer_unregister:
+            if task._live_children.fetch_add(-1) == 1:
+                self._finish(task)
+        else:
+            self._finish(task)
+
+    def _worker(self, wid: int):
+        _current_task.wid = wid
+        idle_spins = 0
+        while not self._stop:
+            task = self.scheduler.get_ready_task(wid)
+            if task is None:
+                idle_spins += 1
+                self.tracer.event("worker.idle", wid)
+                time.sleep(0 if idle_spins < 100 else 0.0005)
+                continue
+            idle_spins = 0
+            self._run_task(task, wid)
+
+    # ---------------------------------------------------------------- sync
+    def taskwait(self, task: Task, timeout: Optional[float] = None) -> bool:
+        ev = task.wait_handle()
+        if task.state == DONE:
+            return True
+        return ev.wait(timeout)
+
+    def barrier(self, timeout: Optional[float] = None) -> bool:
+        """Wait until all spawned tasks (incl. nested) fully finished."""
+        return self._quiescent.wait(timeout)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {"pool": self.pool.stats,
+                "pending": self.scheduler.pending(),
+                "live": self._live.load()}

@@ -1,0 +1,193 @@
+"""Task scheduling system (paper §3).
+
+- UnsyncScheduler: the actual policy container (FIFO / LIFO / locality),
+  deliberately unsynchronized — simplicity is the point of the design.
+- SyncScheduler: the paper's §3.4 design — per-NUMA SPSC insertion buffers
+  guarded by PTLocks on the producer side, a DTLock protecting the policy
+  container, and delegation: the lock owner drains the SPSC buffers and
+  serves ready tasks directly to the threads spinning in lockOrDelegate.
+- GlobalLockScheduler: the −DTLock ablation (PTLock around everything).
+- WorkStealingScheduler: per-worker deques + steal; stands in for the
+  LLVM/Intel OpenMP comparison baseline.
+
+All schedulers expose add_ready_task(task) / get_ready_task(worker_id).
+"""
+from __future__ import annotations
+
+import random
+import threading
+from collections import deque
+from typing import Optional
+
+from repro.core.locks import DTLock, MutexLock, PTLock
+from repro.core.spsc import SPSCQueue
+
+
+class UnsyncScheduler:
+    """Policy container. NOT thread safe by design (callers synchronize)."""
+
+    def __init__(self, policy: str = "fifo"):
+        self.policy = policy
+        self._q = deque()
+        self._local: dict[int, deque] = {}
+
+    def add_ready_task(self, task):
+        hint = getattr(task, "affinity", None)
+        if self.policy == "locality" and hint is not None:
+            self._local.setdefault(hint, deque()).append(task)
+        else:
+            self._q.append(task)
+
+    def get_ready_task(self, worker_id: int):
+        if self.policy == "locality":
+            lq = self._local.get(worker_id)
+            if lq:
+                return lq.popleft()
+            for q in self._local.values():
+                if q:
+                    return q.popleft()
+        if not self._q:
+            return None
+        if self.policy == "lifo":
+            return self._q.pop()
+        return self._q.popleft()
+
+    def __len__(self):
+        return len(self._q) + sum(len(q) for q in self._local.values())
+
+
+class SyncScheduler:
+    """Paper Listing 5: SPSC buffers + DTLock delegation."""
+
+    def __init__(self, n_workers: int, policy: str = "fifo",
+                 n_numa: int = 1, spsc_capacity: int = 256,
+                 instrument=None):
+        self.n_workers = n_workers
+        self._sched = UnsyncScheduler(policy)
+        size = max(64, 2 * n_workers)
+        self._lock: DTLock = DTLock(size)
+        self._numa = max(1, n_numa)
+        self._add_queues = [SPSCQueue(spsc_capacity) for _ in range(self._numa)]
+        self._add_locks = [PTLock(size) for _ in range(self._numa)]
+        self._instr = instrument
+
+    # -- producer side ------------------------------------------------
+    def add_ready_task(self, task, numa_hint: int = 0):
+        q = self._add_queues[numa_hint % self._numa]
+        lk = self._add_locks[numa_hint % self._numa]
+        while True:
+            lk.lock()
+            added = q.push(task)
+            lk.unlock()
+            if added:
+                return
+            # buffer full: try to become the scheduler server and drain
+            if self._lock.try_lock():
+                self._process_ready_tasks()
+                self._lock.unlock()
+
+    def _process_ready_tasks(self):
+        for q in self._add_queues:
+            q.consume_all(self._sched.add_ready_task)
+
+    # -- consumer side ------------------------------------------------
+    def get_ready_task(self, worker_id: int):
+        acquired, item = self._lock.lock_or_delegate(worker_id)
+        if not acquired:
+            if self._instr:
+                self._instr.event("sched.delegated", worker_id)
+            return item
+        self._process_ready_tasks()
+        served = 0
+        while not self._lock.empty():
+            waiting_id = self._lock.front()
+            task = self._sched.get_ready_task(waiting_id)
+            if task is None:
+                break
+            self._lock.set_item(waiting_id, task)
+            self._lock.pop_front()
+            served += 1
+        if self._instr and served:
+            self._instr.event("sched.served", served)
+        task = self._sched.get_ready_task(worker_id)
+        self._lock.unlock()
+        return task
+
+    def pending(self) -> int:
+        return len(self._sched) + sum(len(q) for q in self._add_queues)
+
+
+class GlobalLockScheduler:
+    """−DTLock ablation: a single PTLock serializes add & get (paper §3)."""
+
+    def __init__(self, n_workers: int, policy: str = "fifo",
+                 lock_cls=PTLock, **kw):
+        self._sched = UnsyncScheduler(policy)
+        self._lock = lock_cls(max(64, 2 * n_workers))
+
+    def add_ready_task(self, task, numa_hint: int = 0):
+        self._lock.lock()
+        self._sched.add_ready_task(task)
+        self._lock.unlock()
+
+    def get_ready_task(self, worker_id: int):
+        self._lock.lock()
+        task = self._sched.get_ready_task(worker_id)
+        self._lock.unlock()
+        return task
+
+    def pending(self) -> int:
+        return len(self._sched)
+
+
+class WorkStealingScheduler:
+    """Per-worker deques with random stealing (LLVM-OpenMP-style baseline).
+
+    Tasks created by non-workers go to the creator queue (index 0 owner) —
+    the paper's point: with a single creator, every worker ends up stealing
+    from one queue, degenerating to a contended global structure.
+    """
+
+    def __init__(self, n_workers: int, policy: str = "fifo", seed: int = 0,
+                 **kw):
+        self.n = max(1, n_workers)
+        self._qs = [deque() for _ in range(self.n)]
+        self._lks = [MutexLock() for _ in range(self.n)]
+        self._rng = random.Random(seed)
+
+    def add_ready_task(self, task, numa_hint: int = 0, worker_id: Optional[int] = None):
+        wid = worker_id if worker_id is not None else 0
+        i = wid % self.n
+        self._lks[i].lock()
+        self._qs[i].append(task)
+        self._lks[i].unlock()
+
+    def get_ready_task(self, worker_id: int):
+        i = worker_id % self.n
+        self._lks[i].lock()
+        task = self._qs[i].pop() if self._qs[i] else None  # LIFO own queue
+        self._lks[i].unlock()
+        if task is not None:
+            return task
+        # steal FIFO from a random victim
+        start = self._rng.randrange(self.n)
+        for k in range(self.n):
+            v = (start + k) % self.n
+            if v == i:
+                continue
+            self._lks[v].lock()
+            task = self._qs[v].popleft() if self._qs[v] else None
+            self._lks[v].unlock()
+            if task is not None:
+                return task
+        return None
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._qs)
+
+
+SCHEDULER_KINDS = {
+    "delegation": SyncScheduler,
+    "global-lock": GlobalLockScheduler,
+    "work-stealing": WorkStealingScheduler,
+}

@@ -1,0 +1,54 @@
+"""Bounded wait-free single-producer single-consumer ring buffer (§3.1).
+
+Classic Lamport queue: producer writes slot then publishes head; consumer
+reads tail slot then publishes tail. Under the GIL, int loads/stores are
+atomic and sequentially consistent, which over-satisfies the acquire/release
+ordering the C++ original needs.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class SPSCQueue:
+    __slots__ = ("_buf", "_cap", "_head", "_tail")
+
+    def __init__(self, capacity: int = 256):
+        self._cap = capacity + 1  # one empty slot distinguishes full/empty
+        self._buf: List[Optional[object]] = [None] * self._cap
+        self._head = 0  # next write index (producer-owned)
+        self._tail = 0  # next read index (consumer-owned)
+
+    def push(self, item) -> bool:
+        head = self._head
+        nxt = (head + 1) % self._cap
+        if nxt == self._tail:  # full
+            return False
+        self._buf[head] = item
+        self._head = nxt  # publish
+        return True
+
+    def pop(self):
+        tail = self._tail
+        if tail == self._head:  # empty
+            return None
+        item = self._buf[tail]
+        self._buf[tail] = None
+        self._tail = (tail + 1) % self._cap
+        return item
+
+    def consume_all(self, fn) -> int:
+        n = 0
+        while True:
+            item = self.pop()
+            if item is None:
+                return n
+            fn(item)
+            n += 1
+
+    def __len__(self):
+        return (self._head - self._tail) % self._cap
+
+    @property
+    def capacity(self) -> int:
+        return self._cap - 1

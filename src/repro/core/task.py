@@ -1,0 +1,116 @@
+"""Task structure and lifecycle (created -> blocked/ready -> running -> done).
+
+A Task owns its DataAccess array (paper Listing 1). Readiness accounting:
+``_pending`` counts unsatisfied accesses plus one registration guard so a
+task can never become ready while its accesses are still being linked.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Callable, Iterable, Optional
+
+from repro.core.asm import (COMMUTATIVE, READ, READWRITE, REDUCTION, WRITE,
+                            DataAccess)
+from repro.core.atomic import AtomicU64
+
+_task_ids = itertools.count(1)
+
+CREATED, BLOCKED, READY, RUNNING, DONE = range(5)
+
+
+class Task:
+    __slots__ = ("task_id", "fn", "args", "kwargs", "name", "accesses",
+                 "parent", "_pending", "_access_map", "state", "result",
+                 "affinity", "on_ready", "_live_children", "_done_event",
+                 "exception", "created_ns", "ready_ns", "start_ns", "end_ns",
+                 "pooled")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.task_id = next(_task_ids)
+        self.fn: Optional[Callable] = None
+        self.args = ()
+        self.kwargs = {}
+        self.name = ""
+        self.accesses: list[DataAccess] = []
+        self.parent: Optional[Task] = None
+        self._pending = AtomicU64(0)
+        self._access_map = {}
+        self.state = CREATED
+        self.result = None
+        self.exception: Optional[BaseException] = None
+        self.affinity: Optional[int] = None
+        self.on_ready: Optional[Callable] = None
+        self._live_children = AtomicU64(0)
+        self._done_event: Optional[threading.Event] = None
+        self.created_ns = self.ready_ns = self.start_ns = self.end_ns = 0
+        self.pooled = False
+
+    # ------------------------------------------------------------ build
+    def init(self, fn, args=(), kwargs=None, *, name="", parent=None,
+             reads=(), writes=(), rw=(), reductions=(), commutative=(),
+             affinity=None, access_factory=DataAccess):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs or {}
+        self.name = name or getattr(fn, "__name__", "task")
+        self.parent = parent
+        self.affinity = affinity
+        accs = []
+        for addr in reads:
+            accs.append(access_factory(addr, READ, self))
+        for addr in writes:
+            accs.append(access_factory(addr, WRITE, self))
+        for addr in rw:
+            accs.append(access_factory(addr, READWRITE, self))
+        for item in reductions:
+            addr, op = item if isinstance(item, tuple) else (item, "+")
+            accs.append(access_factory(addr, REDUCTION, self, red_op=op))
+        for addr in commutative:
+            accs.append(access_factory(addr, COMMUTATIVE, self))
+        self.accesses = accs
+        self._access_map = {a.address: a for a in accs}
+        # +1 registration guard (released by registration_done)
+        self._pending = AtomicU64(len(accs) + 1)
+        self.state = BLOCKED
+        return self
+
+    def access_for(self, address) -> Optional[DataAccess]:
+        return self._access_map.get(address)
+
+    # ------------------------------------------------------------ readiness
+    def access_satisfied(self, access) -> None:
+        if self._pending.fetch_add(-1) == 1:
+            self._become_ready()
+
+    def registration_done(self) -> None:
+        if self._pending.fetch_add(-1) == 1:
+            self._become_ready()
+
+    def _become_ready(self):
+        self.state = READY
+        if self.on_ready is not None:
+            self.on_ready(self)
+
+    # ------------------------------------------------------------ execution
+    def run(self):
+        self.state = RUNNING
+        try:
+            self.result = self.fn(*self.args, **self.kwargs)
+        except BaseException as e:  # surfaced by runtime
+            self.exception = e
+        self.state = DONE
+        ev = self._done_event
+        if ev is not None:
+            ev.set()
+
+    def wait_handle(self) -> threading.Event:
+        if self._done_event is None:
+            self._done_event = threading.Event()
+        return self._done_event
+
+    def __repr__(self):
+        return f"Task#{self.task_id}({self.name}, state={self.state})"

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, TokenSource
+
+__all__ = ["DataPipeline", "TokenSource"]

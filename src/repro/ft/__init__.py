@@ -1,0 +1,3 @@
+from repro.ft.monitor import HeartbeatMonitor, StragglerMitigator
+
+__all__ = ["HeartbeatMonitor", "StragglerMitigator"]

@@ -1,0 +1,135 @@
+"""Fault tolerance: heartbeats, straggler detection/mitigation, elastic plan.
+
+At thousand-node scale the host-side control plane must (1) notice dead or
+slow hosts fast, (2) keep the step cadence insulated from slow auxiliary
+work, and (3) re-plan onto fewer/more hosts from the last committed
+checkpoint. Here:
+
+- HeartbeatMonitor: participants beat(); a monitor thread flags anyone
+  silent > timeout and invokes the on_failure callback (the train engine
+  responds by checkpoint-restore, see launch/train.py).
+- StragglerMitigator: per-participant EWMA of step durations; anyone slower
+  than `ratio` x median is flagged. Mitigation hooks into the paper's
+  runtime naturally: host-side tasks owned by a straggler are simply
+  *delegated* — the DTLock owner executes them (§3.3) — and the data shard
+  map can be rebalanced via propose_rebalance().
+- plan_elastic_mesh: next (pod,data,model) factorization for a surviving
+  chip count; restore is mesh-agnostic (checkpoint stores logical arrays).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from typing import Callable, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float = 2.0, interval_s: float = 0.2,
+                 on_failure: Optional[Callable] = None):
+        self.timeout = timeout_s
+        self.interval = interval_s
+        self.on_failure = on_failure
+        self._last: dict = {}
+        self._lock = threading.Lock()
+        self._stop = False
+        self._failed: set = set()
+        self._thread: Optional[threading.Thread] = None
+
+    def beat(self, who):
+        with self._lock:
+            self._last[who] = time.monotonic()
+            self._failed.discard(who)
+
+    def deregister(self, who):
+        with self._lock:
+            self._last.pop(who, None)
+            self._failed.discard(who)
+
+    def _loop(self):
+        while not self._stop:
+            now = time.monotonic()
+            newly = []
+            with self._lock:
+                for who, t in self._last.items():
+                    if who not in self._failed and now - t > self.timeout:
+                        self._failed.add(who)
+                        newly.append(who)
+            for who in newly:
+                if self.on_failure:
+                    self.on_failure(who)
+            time.sleep(self.interval)
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop = True
+        if self._thread:
+            self._thread.join(timeout=2)
+
+    @property
+    def failed(self):
+        with self._lock:
+            return set(self._failed)
+
+
+class StragglerMitigator:
+    def __init__(self, ratio: float = 2.0, alpha: float = 0.3,
+                 min_samples: int = 3):
+        self.ratio = ratio
+        self.alpha = alpha
+        self.min_samples = min_samples
+        self._ewma: dict = {}
+        self._n: dict = defaultdict(int)
+        self._lock = threading.Lock()
+
+    def record(self, who, duration_s: float):
+        with self._lock:
+            prev = self._ewma.get(who)
+            self._ewma[who] = (duration_s if prev is None
+                               else self.alpha * duration_s + (1 - self.alpha) * prev)
+            self._n[who] += 1
+
+    def stragglers(self) -> list:
+        with self._lock:
+            vals = [(w, v) for w, v in self._ewma.items()
+                    if self._n[w] >= self.min_samples]
+        if len(vals) < 2:
+            return []
+        med = sorted(v for _, v in vals)[len(vals) // 2]
+        return [w for w, v in vals if v > self.ratio * max(med, 1e-9)]
+
+    def propose_rebalance(self, shard_owners: dict) -> dict:
+        """Reassign shards away from stragglers, round-robin to the rest."""
+        slow = set(self.stragglers())
+        if not slow:
+            return shard_owners
+        fast = [w for w in shard_owners.values() if w not in slow]
+        if not fast:
+            return shard_owners
+        out = {}
+        i = 0
+        for shard, owner in shard_owners.items():
+            if owner in slow:
+                out[shard] = fast[i % len(fast)]
+                i += 1
+            else:
+                out[shard] = owner
+        return out
+
+
+def plan_elastic_mesh(n_chips: int, *, model: int = 16) -> tuple:
+    """Factor a surviving chip count into (pod, data, model). Keeps TP=16
+    (intra-pod ICI domain) and shrinks DP — standard elastic policy."""
+    assert n_chips % model == 0, (n_chips, model)
+    dp = n_chips // model
+    pod = 1
+    for cand in (8, 4, 2):
+        if dp % 16 == 0 and dp // 16 >= cand and dp % (cand * 16) == 0:
+            pod = cand
+            break
+    data = dp // pod
+    return (pod, data, model) if pod > 1 else (data, model)

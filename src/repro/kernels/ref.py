@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd). Masked softmax."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    kk = jnp.repeat(k, group, axis=2)
+    vv = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask[None, None], s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))
+    # rows that are fully masked produce zeros (match kernel semantics)
+    out = out * mask.any(axis=-1)[None, :, None, None]
+    return out.astype(q.dtype)
+
+
+def ssm_ref(x, dt, A, B, C, init_state=None):
+    """Naive sequential SSM scan (the SSD ground truth).
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, n)
+    h_t = h_{t-1} * exp(dt*A) + dt * x_t B_t^T ;  y_t = h_t C_t
+    Returns (y: (b,l,h,p), final_state: (b,h,p,n)) in float32.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    state = (jnp.zeros((b, h, p, n), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * A[None])  # (b,h)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, None, None, :]
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state

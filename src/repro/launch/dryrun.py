@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), then record memory/cost/collective
+analysis for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --arch all --shape all --mesh both --out-dir experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.launch import hlo_cost
+from repro.launch.hlo_analysis import analyze_collectives, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, default_train_config
+
+
+def make_mesh(which: str):
+    if which == "single":
+        return make_production_mesh(multi_pod=False)
+    if which == "multi":
+        return make_production_mesh(multi_pod=True)
+    if which == "tiny":  # debug: 2x2 over the 512 host devices
+        devs = np.array(jax.devices()[:4]).reshape(2, 2)
+        return jax.sharding.Mesh(devs, ("data", "model"))
+    raise ValueError(which)
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-work floor: 6*N_active*tokens (train) / 2*N_active*tokens (inference)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+VARIANTS = {
+    # §Perf hillclimb knobs; "baseline" is the paper-faithful configuration.
+    "baseline": {},
+    "ssd-bf16mask": {"cfg": {"ssd_mask_bf16": True}},
+    "ssd-chunk128": {"cfg": {"ssm_chunk": 128}},
+    "ssd-chunk64": {"cfg": {"ssm_chunk": 64}},
+    "ssd-chunk512": {"cfg": {"ssm_chunk": 512}},
+    "attn-bf16-scores": {"cfg": {"attn_scores_bf16": True}},
+    "loss-bf16-onehot": {"cfg": {"loss_onehot_bf16": True}},
+    "gather-once": {"tc": {"fsdp_gather_once": True}},
+    "micro2": {"tc": {"microbatches": 2}},
+    "micro8": {"tc": {"microbatches": 8}},
+    "combo-mem": {"cfg": {"attn_scores_bf16": True, "loss_onehot_bf16": True,
+                          "ssd_mask_bf16": True}},
+    "combo-all": {"cfg": {"attn_scores_bf16": True, "loss_onehot_bf16": True,
+                          "ssd_mask_bf16": True},
+                  "tc": {"fsdp_gather_once": True}},
+    "int8-podgrads": {"tc": {"grad_compression": True}},  # multi mesh only
+    "remat-dots": {"cfg": {"remat_policy": "dots"}},
+    "chunk128-remat": {"cfg": {"ssm_chunk": 128, "remat_policy": "dots"}},
+    # measurement instrument: isolates S^2 attention-score traffic
+    "attn-stub": {"cfg": {"attn_traffic_stub": True}},
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             variant: str = "baseline") -> dict:
+    import dataclasses
+
+    from repro.launch.steps import default_train_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    vr = VARIANTS[variant]
+    if vr.get("cfg"):
+        cfg = dataclasses.replace(cfg, **vr["cfg"])
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "variant": variant}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_mesh(mesh_name)
+    n_dev = mesh.size
+    try:
+        t0 = time.time()
+        from repro.launch.steps import _dp_size
+        tc = default_train_config(cfg, shape, _dp_size(mesh))
+        if vr.get("tc"):
+            tc = dataclasses.replace(tc, **vr["tc"])
+        fn, args = build_cell(cfg, shape, mesh, tc)
+        with mesh:
+            lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        rec.update(status="ok", lower_s=round(t_lower, 2),
+                   compile_s=round(t_compile, 2), n_devices=n_dev)
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory"] = {"error": repr(e)}
+
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost"] = {k: ca.get(k) for k in
+                           ("flops", "bytes accessed", "transcendentals",
+                            "optimal_seconds") if k in ca}
+        except Exception as e:
+            rec["cost"] = {"error": repr(e)}
+
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        coll = analyze_collectives(hlo, n_dev)
+        rec["collectives_unrolled_once"] = {
+            "wire_bytes": coll["wire_bytes"],
+            "n_collectives": coll["n_collectives"],
+        }
+
+        # trip-count-aware static cost model (the §Roofline source of truth)
+        tc_cost = hlo_cost.analyze(hlo, n_dev)
+        rec["hlo_cost"] = tc_cost
+        rec["collectives"] = {
+            "wire_bytes": tc_cost["wire_bytes"],
+            "by_type": tc_cost["wire_by_type"],
+            "by_group": tc_cost["wire_by_group"],
+        }
+
+        flops = float(tc_cost["flops"])
+        byts = float(tc_cost["bytes"])
+        rec["roofline"] = roofline_terms(flops, byts, tc_cost["wire_bytes"])
+        mf = model_flops(cfg, shape)
+        rec["model_flops"] = mf
+        if flops:
+            rec["useful_flops_ratio"] = mf / (flops * n_dev)
+    except Exception as e:
+        rec.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both", "tiny"])
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    suffix = "" if args.variant == "baseline" else f"__{args.variant}"
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                cfgname = get_config(arch).name
+                out = os.path.join(
+                    args.out_dir,
+                    f"{cfgname}__{shape}__{mesh_name}{suffix}.json")
+                if os.path.exists(out):
+                    print(f"[skip existing] {out}", flush=True)
+                    continue
+                print(f"[cell] {arch} x {shape} x {mesh_name} "
+                      f"({args.variant}) ...", flush=True)
+                rec = run_cell(arch, shape, mesh_name, args.variant)
+                with open(out, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"  -> {rec['status']} "
+                      f"(compile={rec.get('compile_s', '-')}s, "
+                      f"dom={rec.get('roofline', {}).get('dominant', '-')})",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

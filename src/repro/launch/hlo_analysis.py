@@ -1,0 +1,127 @@
+"""Post-compile HLO analysis: collective-traffic extraction + roofline terms.
+
+cost_analysis() gives per-device FLOPs / bytes, but NOT collective traffic.
+We parse the optimized (post-SPMD) HLO text: every instruction definition
+line carries its result type; collective lines reference operands by name, so
+a def-table lookup yields operand bytes.
+
+Wire-byte model per chip (documented for §Roofline):
+  all-reduce        2*(g-1)/g * operand_bytes   (ring: reduce-scatter+all-gather)
+  all-gather        (g-1)/g  * result_bytes
+  reduce-scatter    (g-1)/g  * operand_bytes
+  all-to-all        (g-1)/g  * operand_bytes
+  collective-permute           operand_bytes
+g = replica-group size parsed from the instruction. Shapes in the partitioned
+module are per-device, so these are per-chip wire bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [n_groups, group_size]<=[total]
+        return int(m.group(2))
+    return default
+
+
+def analyze_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Returns {"per_op": [...], "wire_bytes": float, "by_type": {...}}."""
+    defs: dict[str, int] = {}
+    events = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        defs[name] = type_bytes(type_str)
+        base = opcode.replace("-start", "")
+        if base in COLLECTIVE_OPS:
+            events.append((name, base, type_str, line))
+
+    by_type = defaultdict(float)
+    per_op = []
+    total_wire = 0.0
+    for name, op, type_str, line in events:
+        # operand bytes: sum of named operands already defined
+        paren = line.split("(", 1)[1]
+        paren = paren.split("),", 1)[0]
+        operands = [o for o in _OPERAND_RE.findall(paren) if o in defs and o != name]
+        operand_bytes = sum(defs[o] for o in operands)
+        result_bytes = type_bytes(type_str)
+        g = _group_size(line, n_devices)
+        if op == "all-reduce":
+            wire = 2.0 * (g - 1) / max(g, 1) * operand_bytes
+        elif op == "all-gather":
+            wire = (g - 1) / max(g, 1) * result_bytes
+        elif op in ("reduce-scatter", "all-to-all"):
+            wire = (g - 1) / max(g, 1) * operand_bytes
+        elif op == "collective-broadcast":
+            wire = float(result_bytes)
+        else:  # collective-permute
+            wire = float(operand_bytes)
+        total_wire += wire
+        by_type[op] += wire
+        per_op.append({"name": name, "op": op, "group": g,
+                       "operand_bytes": operand_bytes,
+                       "result_bytes": result_bytes, "wire_bytes": wire})
+    return {"per_op": per_op, "wire_bytes": total_wire,
+            "by_type": dict(by_type), "n_collectives": len(events)}
+
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    ct = flops_per_dev / PEAK_FLOPS_BF16
+    mt = bytes_per_dev / HBM_BW
+    lt = wire_bytes_per_dev / ICI_BW
+    dom = max((ct, "compute"), (mt, "memory"), (lt, "collective"))
+    return {
+        "compute_s": ct, "memory_s": mt, "collective_s": lt,
+        "dominant": dom[1], "bound_s": dom[0],
+        "roofline_fraction": ct / max(dom[0], 1e-30),
+    }

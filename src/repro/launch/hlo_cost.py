@@ -1,0 +1,339 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts every ``while`` (lax.scan) body ONCE, so a
+scanned-layer transformer under-reports flops/bytes/collective traffic by the
+trip count (layers x microbatches). This module parses the optimized HLO text
+into computations, extracts while-loop trip counts from their condition
+computations, and accumulates:
+
+- flops:      dots (2*M*N*K from shapes + contracting dims), elementwise,
+              reduces — fused computations included.
+- bytes:      HBM traffic approximation: operand+result bytes of every
+              top-level (post-fusion) instruction; fusion interiors are free
+              (they stream through registers/VMEM), matching the TPU model.
+- wire bytes: collective traffic with the same ring-model factors as
+              hlo_analysis.py, multiplied by enclosing loop trip counts.
+
+This is a static model — exact on trip counts and dot shapes, approximate on
+elementwise flops (1 flop/element) — and is the source for §Roofline.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+# type is either a tuple "( ... )" (may contain /*index=N*/ comments) or a
+# single "dtype[dims]{layout}"; followed by the opcode and its open paren.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "compare", "select", "and", "or", "xor", "not",
+    "clamp", "floor", "ceil", "round-nearest-afz", "remainder", "power",
+    "atan2", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                  "sine", "cosine", "exponential-minus-one", "log-plus-one",
+                  "cbrt", "erf"}
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "iota", "reshape", "partition-id", "replica-id",
+            "rng-get-and-update-state", "custom-call", "domain",
+            "opt-barrier", "get-dimension-size"}
+CONTROL_OPS = {"while", "call", "conditional", "fusion", "async-start",
+               "async-done", "async-update"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast"}
+
+
+def _parse_type(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Returns (total_bytes, [(dtype, dims), ...])."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        n = math.prod(dims) if dims else 1
+        total += n * DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+def type_bytes(type_str: str) -> int:
+    return _parse_type(type_str)[0]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    bytes_: int
+    dims: List[Tuple[str, List[int]]]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            # computation header: top-level line ending in "{"
+            if line.rstrip().endswith("{") and (
+                    line.startswith("%") or line.startswith("ENTRY")):
+                m = _COMP_NAME_RE.match(line)
+                if m:
+                    cur = Computation(m.group(1))
+                    if line.startswith("ENTRY"):
+                        entry = cur.name
+                continue
+        else:
+            s = line.strip()
+            if s == "}" or s.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, type_str, opcode = m.groups()
+                b, dims = _parse_type(type_str)
+                cur.instrs.append(Instr(name, type_str, opcode, line, b, dims))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Heuristic: largest integer constant in the condition computation."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_RE.finditer(ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    wire_by_type: dict = field(default_factory=lambda: defaultdict(float))
+    wire_by_group: dict = field(default_factory=lambda: defaultdict(float))
+    coll_events: list = field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for k, v in other.wire_by_type.items():
+            self.wire_by_type[k] += v * mult
+        for k, v in other.wire_by_group.items():
+            self.wire_by_group[k] += v * mult
+
+
+class HloCostModel:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self.defs: Dict[str, Instr] = {}
+        for c in self.comps.values():
+            for ins in c.instrs:
+                self.defs[ins.name] = ins
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    # -------------------------------------------------- per-instruction
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems = math.prod(ins.dims[0][1]) if ins.dims else 0
+        m = _LHS_CONTRACT_RE.search(ins.line)
+        k = 1
+        if m:
+            idxs = [int(i) for i in m.group(1).split(",") if i]
+            # lhs operand shape: first operand
+            paren = ins.line.split("(", 1)[1]
+            ops = _OPERAND_RE.findall(paren.split("),", 1)[0])
+            lhs_dims = None
+            # inline operand types take priority
+            im = _SHAPE_RE.search(paren)
+            if im:
+                dims_s = im.group(2)
+                lhs_dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+            elif ops and ops[0] in self.defs and self.defs[ops[0]].dims:
+                lhs_dims = self.defs[ops[0]].dims[0][1]
+            if lhs_dims:
+                for i in idxs:
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def _operand_bytes(self, ins: Instr) -> int:
+        paren = ins.line.split("(", 1)[1]
+        # cut at "), " attribute boundary
+        depth, end = 1, len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        inner = paren[:end]
+        total = 0
+        for o in _OPERAND_RE.findall(inner):
+            if o in self.defs and o != ins.name:
+                total += self.defs[o].bytes_
+        return total
+
+    # -------------------------------------------------- computations
+    def comp_cost(self, name: str, fused: bool = False) -> Cost:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        cost = Cost()
+        comp = self.comps.get(name)
+        if comp is None:
+            self._memo[key] = cost
+            return cost
+        for ins in comp.instrs:
+            op = ins.opcode
+            out_elems = sum(math.prod(d) if d else 1 for _, d in ins.dims)
+            if op == "dot":
+                cost.flops += self._dot_flops(ins)
+                if not fused:
+                    cost.bytes += ins.bytes_ + self._operand_bytes(ins)
+            elif op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    cost.add(self.comp_cost(m.group(1), fused=True))
+                cost.bytes += ins.bytes_ + self._operand_bytes(ins)
+            elif op == "while":
+                cm = _COND_RE.search(ins.line)
+                bm = _BODY_RE.search(ins.line)
+                trips = _trip_count(self.comps[cm.group(1)]) if cm and cm.group(1) in self.comps else 1
+                if bm:
+                    cost.add(self.comp_cost(bm.group(1)), mult=trips)
+                if cm:
+                    cost.add(self.comp_cost(cm.group(1)), mult=trips)
+            elif op == "conditional":
+                mb = _BRANCHES_RE.search(ins.line)
+                if mb:
+                    branch_costs = [self.comp_cost(b.strip().lstrip("%"))
+                                    for b in mb.group(1).split(",")]
+                    if branch_costs:
+                        best = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                        cost.add(best)
+            elif op == "call":
+                m = _TO_APPLY_RE.search(ins.line)
+                if m:
+                    cost.add(self.comp_cost(m.group(1)))
+            elif op in COLLECTIVES or op.replace("-start", "") in COLLECTIVES:
+                base = op.replace("-start", "")
+                g = _group_size(ins.line, self.n_devices)
+                operand_bytes = self._operand_bytes(ins)
+                result_bytes = ins.bytes_
+                if base == "all-reduce":
+                    wire = 2.0 * (g - 1) / max(g, 1) * operand_bytes
+                elif base == "all-gather":
+                    wire = (g - 1) / max(g, 1) * result_bytes
+                elif base in ("reduce-scatter", "all-to-all"):
+                    wire = (g - 1) / max(g, 1) * operand_bytes
+                elif base == "collective-broadcast":
+                    wire = float(result_bytes)
+                else:  # collective-permute
+                    wire = float(operand_bytes)
+                cost.wire_bytes += wire
+                cost.wire_by_type[base] += wire
+                cost.wire_by_group[g] += wire
+                cost.coll_events.append(
+                    {"name": ins.name, "op": base, "group": g,
+                     "wire_bytes": wire})
+                cost.bytes += result_bytes + operand_bytes
+            elif op in FREE_OPS:
+                pass
+            elif op in ("copy", "copy-start", "transpose", "broadcast",
+                        "concatenate", "slice", "dynamic-slice",
+                        "dynamic-update-slice", "pad", "reverse", "convert",
+                        "gather", "scatter", "reduce", "sort", "select-and-scatter",
+                        "reduce-window", "rng", "rng-bit-generator", "cholesky",
+                        "triangular-solve", "convolution", "map", "copy-done"):
+                if op == "reduce":
+                    # ~1 flop per reduced input element (bytes/4 ~ f32 elems)
+                    cost.flops += self._operand_bytes(ins) / 4.0
+                if not fused:
+                    cost.bytes += ins.bytes_ + self._operand_bytes(ins)
+            elif op in ELEMENTWISE:
+                cost.flops += out_elems
+                if not fused:
+                    cost.bytes += ins.bytes_ + self._operand_bytes(ins)
+            elif op in TRANSCENDENTAL:
+                cost.flops += out_elems
+                cost.transcendentals += out_elems
+                if not fused:
+                    cost.bytes += ins.bytes_ + self._operand_bytes(ins)
+            else:
+                # unknown op: count bytes conservatively at top level
+                if not fused:
+                    cost.bytes += ins.bytes_ + self._operand_bytes(ins)
+        self._memo[key] = cost
+        return cost
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(text: str, n_devices: int) -> dict:
+    model = HloCostModel(text, n_devices)
+    c = model.total()
+    return {
+        "flops": c.flops,
+        "transcendentals": c.transcendentals,
+        "bytes": c.bytes,
+        "wire_bytes": c.wire_bytes,
+        "wire_by_type": dict(c.wire_by_type),
+        "wire_by_group": {str(k): v for k, v in c.wire_by_group.items()},
+    }

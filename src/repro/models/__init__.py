@@ -1,0 +1,10 @@
+from repro.models.api import (abstract_cache, cache_pspecs, forward,
+                              init_cache, loss_fn)
+from repro.models.params import (abstract_params, build_param_specs,
+                                 init_params, param_count_exact, param_pspecs)
+
+__all__ = [
+    "abstract_cache", "abstract_params", "build_param_specs", "cache_pspecs",
+    "forward", "init_cache", "init_params", "loss_fn", "param_count_exact",
+    "param_pspecs",
+]

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer (shared + routed top-k, DeepSeekMoE/Qwen2-MoE style)
+with explicit expert parallelism.
+
+Sharding strategy (see DESIGN.md §4): tokens are data-parallel, routed experts
+are sharded over the ``model`` axis (EP), expert ffn dims are FSDP-sharded over
+``data`` and all-gathered per layer inside a shard_map. Every model rank holds
+the full local token set (activations are replicated over ``model`` at the MoE
+boundary), computes its local experts' contributions via linear-cost
+scatter/gather dispatch (capacity-dropped), and a single psum over ``model``
+combines routed + shared contributions — the same one collective a Megatron
+MLP block pays.
+
+Dispatch is O(T·k·d): token positions within each expert come from a cumsum
+over a one-hot (T·k, E_local+1) matrix (the +1 bucket absorbs non-local and
+dropped tokens); no quadratic one-hot einsum is ever built.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Sharder, activation
+
+try:  # jax>=0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _capacity(cfg, tokens_local: int, n_local_experts: int) -> int:
+    per = tokens_local * cfg.moe_top_k / cfg.n_routed_experts
+    return max(8, int(math.ceil(per * cfg.moe_capacity_factor)))
+
+
+def _fsdp_gather(w, axis_name, axis):
+    if axis_name is None:
+        return w
+    return jax.lax.all_gather(w, axis_name, axis=axis, tiled=True)
+
+
+def _moe_block(cfg, x, router, wi, wg, wo, shared, *, rank, n_ranks,
+               dp_axes, fsdp_axis, model_axis):
+    """Local block computation. x: (Bl, S, D) local tokens; wi/wg/wo local
+    expert slices (E_l, D, F_l)/(E_l, F_l, D); router (D, E) replicated."""
+    Bl, S, D = x.shape
+    E, k = cfg.n_routed_experts, cfg.moe_top_k
+    E_l = wi.shape[0]
+    T = Bl * S
+    xt = x.reshape(T, D)
+
+    # ---- routing (replicated math; all ranks agree) ----
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)  # (T, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # normalized gates
+
+    # ---- load-balance aux loss (global over dp) ----
+    ce = jnp.mean(probs, axis=0)  # (E,) mean router prob
+    counts = jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=(0, 1))
+    fe = counts / (T * k)
+    if dp_axes:
+        ce = jax.lax.pmean(ce, dp_axes)
+        fe = jax.lax.pmean(fe, dp_axes)
+    aux = E * jnp.sum(fe * ce)
+
+    # ---- dispatch to local experts ----
+    e0 = rank * E_l
+    lid = topi - e0  # (T, k) local expert ids
+    valid = (lid >= 0) & (lid < E_l)
+    flat_e = jnp.where(valid, lid, E_l).reshape(-1)  # (T*k,), E_l = drop bucket
+    onehot = jax.nn.one_hot(flat_e, E_l + 1, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1  # (T*k,)
+
+    cap = _capacity(cfg, T, E_l)
+    in_cap = (pos < cap) & (flat_e < E_l)
+    dst_e = jnp.where(in_cap, flat_e, E_l)  # out-of-range rows dropped
+    dst_p = jnp.where(in_cap, pos, cap)
+
+    xt_rep = jnp.repeat(xt, k, axis=0)  # (T*k, D) row i -> token i//k
+    buf = jnp.zeros((E_l, cap, D), x.dtype)
+    buf = buf.at[dst_e, dst_p].set(xt_rep, mode="drop")
+
+    # ---- expert ffn (FSDP all-gather of the expert ffn dim) ----
+    wi = _fsdp_gather(wi.astype(x.dtype), fsdp_axis, 2)
+    wg = _fsdp_gather(wg.astype(x.dtype), fsdp_axis, 2)
+    wo = _fsdp_gather(wo.astype(x.dtype), fsdp_axis, 1)
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    h = h * activation(cfg.mlp_act, g)
+    ye = jnp.einsum("ecf,efd->ecd", h, wo)  # (E_l, cap, D)
+
+    # ---- combine back ----
+    gathered = ye.at[dst_e, dst_p].get(mode="fill", fill_value=0)  # (T*k, D)
+    w_flat = (topv.reshape(-1) * in_cap).astype(x.dtype)
+    y = jnp.sum((gathered * w_flat[:, None]).reshape(T, k, D), axis=1)
+
+    # ---- shared experts: Megatron MLP on the model-sharded ffn dim ----
+    if shared is not None:
+        swi, swg, swo = shared
+        swi = _fsdp_gather(swi.astype(x.dtype), fsdp_axis, 0)
+        swg = _fsdp_gather(swg.astype(x.dtype), fsdp_axis, 0)
+        swo = _fsdp_gather(swo.astype(x.dtype), fsdp_axis, 1)
+        hs = jnp.einsum("td,df->tf", xt, swi)
+        gs = jnp.einsum("td,df->tf", xt, swg)
+        y = y + jnp.einsum("tf,fd->td", hs * activation(cfg.mlp_act, gs), swo)
+
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+        # aux is identical on all model ranks; no psum needed.
+    return y.reshape(Bl, S, D), aux
+
+
+def moe_layer(cfg, p, x, sh: Sharder):
+    """x: (B, S, D) -> (y, aux_loss). p holds router/wi/wg/wo[/shared_*]."""
+    shared = None
+    if "shared_wi" in p:
+        shared = (p["shared_wi"], p["shared_wg"], p["shared_wo"])
+
+    if sh.mesh is None or sh.mesh.empty:
+        return _moe_block(cfg, x, p["router"], p["wi"], p["wg"], p["wo"],
+                          shared, rank=0, n_ranks=1, dp_axes=(),
+                          fsdp_axis=None, model_axis=None)
+
+    mesh = sh.mesh
+    model_axis = "model" if "model" in mesh.axis_names else None
+    fsdp_axis = "data" if "data" in mesh.axis_names else None
+    dp_axes = sh.dp_axes
+    n_ranks = mesh.shape[model_axis] if model_axis else 1
+
+    dp = sh.axes("batch")
+    x_spec = P(dp, None, None)
+    router_spec = P(None, None)
+    wi_spec = sh.pspec(("experts", None, "moe_mlp"))
+    wo_spec = sh.pspec(("experts", "moe_mlp", None))
+    sh_wi_spec = sh.pspec(("embed", "mlp"))
+    sh_wo_spec = sh.pspec(("mlp", "embed"))
+
+    in_specs = [x_spec, router_spec, wi_spec, wi_spec, wo_spec]
+    args = [x, p["router"], p["wi"], p["wg"], p["wo"]]
+    if shared is not None:
+        in_specs.append((sh_wi_spec, sh_wi_spec, sh_wo_spec))
+        args.append(shared)
+    else:
+        in_specs.append(None)
+        args.append(None)
+
+    def block(xb, rb, wib, wgb, wob, sharedb):
+        rank = jax.lax.axis_index(model_axis) if model_axis else 0
+        return _moe_block(cfg, xb, rb, wib, wgb, wob, sharedb,
+                          rank=rank, n_ranks=n_ranks, dp_axes=dp_axes,
+                          fsdp_axis=fsdp_axis, model_axis=model_axis)
+
+    y, aux = _shard_map(
+        block, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(x_spec, P()), check_vma=False)(*args)
+    return y, aux

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                               lr_schedule)
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_schedule"]

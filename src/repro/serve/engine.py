@@ -1,0 +1,178 @@
+"""Continuous-batching serving engine orchestrated by the paper's runtime.
+
+Request lifecycle as a task graph (resources in parens):
+  admit      WRITES (slot, i)           — claims a KV slot for the request
+  prefill    RW (slot, i)               — runs the model prefill, fills the
+                                          slot's KV cache, emits first token
+  decode     RW "decode"  READS slots   — ONE batched decode task per
+                                          iteration covers all active slots
+                                          (continuous batching); finished
+                                          slots retire inside the task
+  emit       per-request callback
+
+The decode loop is the paper's single-creator regime: the loop task spawns
+the next decode task; admits/prefills arrive concurrently from request
+threads, and the ASM dependency system interleaves slot claims with the
+batched decode without a global scheduler lock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api as mapi
+from repro.models.common import NULL_SHARDER
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    id: int = 0
+    on_token: Optional[Callable] = None
+    tokens: list = dataclasses.field(default_factory=list)
+    done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, runtime, *, n_slots: int = 4,
+                 max_seq: int = 256, sharder=NULL_SHARDER, greedy=True):
+        self.cfg = cfg
+        self.params = params
+        self.rt = runtime
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.sh = sharder
+        # batched caches: one cache tree with batch dim = n_slots
+        self.cache = mapi.init_cache(cfg, n_slots, max_seq)
+        self.pos = np.zeros(n_slots, np.int32)        # next cache position
+        self.budget = np.zeros(n_slots, np.int32)     # remaining new tokens
+        self.active: list[Optional[Request]] = [None] * n_slots
+        self._free = list(range(n_slots))
+        self._free_lock = threading.Lock()
+        self._queue: list[Request] = []
+        self._qlock = threading.Lock()
+        self._stop = False
+        self._loop_task = None
+        self._next_id = 0
+        self._decode_fn = jax.jit(self._decode_batch)
+        self.stats = {"prefills": 0, "decode_iters": 0, "tokens": 0}
+
+    # ---------------------------------------------------------- model ops
+    def _prefill_one(self, tokens: np.ndarray):
+        """Single-sequence prefill -> (first_token, cache_slices)."""
+        batch = {"tokens": jnp.asarray(tokens)[None, :]}
+        logits, _, cache = mapi.forward(self.cfg, self.params, batch, self.sh,
+                                        mode="prefill")
+        first = int(jnp.argmax(logits[0, -1]))
+        return first, cache
+
+    def _decode_batch(self, cache, tokens, pos):
+        batch = {"tokens": tokens}
+        logits, _, new_cache = mapi.forward(
+            self.cfg, self.params, batch, self.sh, mode="decode",
+            cache=cache, cache_pos=pos)
+        return jnp.argmax(logits[:, -1, :], axis=-1), new_cache
+
+    # ---------------------------------------------------------- lifecycle
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               on_token=None) -> Request:
+        with self._qlock:
+            req = Request(np.asarray(prompt, np.int32), max_new_tokens,
+                          id=self._next_id, on_token=on_token)
+            self._next_id += 1
+            self._queue.append(req)
+        return req
+
+    def _admit(self):
+        """Move queued requests into free slots (spawns prefill tasks)."""
+        while True:
+            with self._free_lock:
+                if not self._free:
+                    return
+            with self._qlock:
+                if not self._queue:
+                    return
+                req = self._queue.pop(0)
+            with self._free_lock:
+                slot = self._free.pop(0)
+            self.rt.spawn(self._prefill_task, (req, slot),
+                          name=f"prefill:{req.id}",
+                          rw=[("slot", slot)], reads=["params"])
+
+    def _prefill_task(self, req: Request, slot: int):
+        L = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
+        first, cache = self._prefill_one(req.prompt[:L])
+        # splice the sequence cache into the batched slot
+        def splice(dst, src):
+            if dst is None:
+                return None
+            if dst.ndim >= 3 and src.shape[0] == dst.shape[0] and \
+                    dst.shape[1] == self.n_slots:
+                # (L, n_slots, T, ...) <- (L, 1, S, ...)
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype),
+                    (0, slot) + (0,) * (dst.ndim - 2))
+            return dst
+        self.cache = jax.tree_util.tree_map(splice, self.cache, cache)
+        self.pos[slot] = L
+        self.budget[slot] = req.max_new_tokens
+        req.tokens.append(first)
+        if req.on_token:
+            req.on_token(first)
+        self.active[slot] = req
+        self.stats["prefills"] += 1
+
+    def _decode_iter(self):
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if live:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            for i in live:
+                toks[i, 0] = self.active[i].tokens[-1]
+            # per-slot cache positions (continuous batching): idle slots
+            # write harmlessly into their own stale position
+            nxt, self.cache = self._decode_fn(self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(self.pos))
+            nxt = np.asarray(nxt)
+            for i in live:
+                req = self.active[i]
+                req.tokens.append(int(nxt[i]))
+                self.stats["tokens"] += 1
+                if req.on_token:
+                    req.on_token(int(nxt[i]))
+                self.pos[i] += 1
+                self.budget[i] -= 1
+                if self.budget[i] <= 0 or self.pos[i] >= self.max_seq - 1:
+                    self.active[i] = None
+                    req.done_event.set()
+                    with self._free_lock:
+                        self._free.append(i)
+            self.stats["decode_iters"] += 1
+        self._admit()
+        if not self._stop:
+            delay = 0.0 if live else 0.002
+            if delay:
+                time.sleep(delay)
+            self._loop_task = self.rt.spawn(
+                self._decode_iter, name="decode.loop", rw=["decode"],
+                reads=["params"])
+
+    def start(self):
+        self._loop_task = self.rt.spawn(self._decode_iter, name="decode.loop",
+                                        rw=["decode"], reads=["params"])
+        return self
+
+    def stop(self):
+        self._stop = True
+
+    def wait(self, req: Request, timeout: float = 120.0) -> bool:
+        return req.done_event.wait(timeout)

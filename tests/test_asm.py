@@ -1,0 +1,178 @@
+"""ASM wait-free dependency system: unit + property tests.
+
+Properties verified (the operational consequences of paper §2.3):
+- exactly-once execution; conflicting accesses execute in program order
+- concurrent-read / same-op-reduction groups may overlap; writes exclude
+- bounded deliveries: every access receives <= |F| messages (wait-freedom's
+  load-bearing invariant)
+- quiescence: the runtime reaches barrier() (no lost messages)
+"""
+import threading
+import time
+
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (READ, REDUCTION, WRITE, TaskRuntime, max_deliveries)
+from repro.core.asm import N_FLAGS
+
+
+def run_graph(task_specs, deps="waitfree", scheduler="delegation",
+              n_workers=3):
+    """task_specs: list of dicts(reads=[...], writes=[...], reductions=[...]).
+    Returns (events, tasks): events = [(tag, start_ns, end_ns)]."""
+    rt = TaskRuntime(n_workers=n_workers, scheduler=scheduler, deps=deps)
+    events = []
+    lock = threading.Lock()
+    tasks = []
+    with rt:
+        def work(tag):
+            t0 = time.monotonic_ns()
+            time.sleep(0.0002)
+            t1 = time.monotonic_ns()
+            with lock:
+                events.append((tag, t0, t1))
+
+        for i, spec in enumerate(task_specs):
+            tasks.append(rt.spawn(
+                work, (i,), name=f"t{i}",
+                reads=spec.get("reads", ()),
+                writes=spec.get("writes", ()),
+                rw=spec.get("rw", ()),
+                reductions=spec.get("reductions", ()),
+                retain=True))
+        assert rt.barrier(timeout=60), "runtime did not quiesce"
+    return events, tasks
+
+
+def check_ordering(task_specs, events):
+    """Conflicting pairs must be disjoint in time and in program order."""
+    iv = {tag: (s, e) for tag, s, e in events}
+    assert len(iv) == len(task_specs), "not exactly-once"
+
+    def accesses(spec):
+        out = {}
+        for a in spec.get("reads", ()):
+            out[a] = ("r", None)
+        for a, op in [x if isinstance(x, tuple) else (x, "+")
+                      for x in spec.get("reductions", ())]:
+            out[a] = ("red", op)
+        for a in spec.get("writes", ()):
+            out[a] = ("w", None)
+        for a in spec.get("rw", ()):
+            out[a] = ("w", None)
+        return out
+
+    def compatible(x, y):
+        if x[0] == "r" and y[0] == "r":
+            return True
+        if x[0] == "red" and y[0] == "red" and x[1] == y[1]:
+            return True
+        return False
+
+    n = len(task_specs)
+    for i in range(n):
+        ai = accesses(task_specs[i])
+        for j in range(i + 1, n):
+            aj = accesses(task_specs[j])
+            conflict = any(a in aj and not compatible(ai[a], aj[a])
+                           for a in ai)
+            if conflict:
+                si, ei = iv[i]
+                sj, ej = iv[j]
+                assert ei <= sj, (
+                    f"conflicting tasks {i} and {j} overlapped or reordered")
+
+
+def test_write_read_write_chain():
+    specs = [{"writes": ["A"]}, {"reads": ["A"]}, {"reads": ["A"]},
+             {"writes": ["A"]}, {"reads": ["A"]}]
+    events, tasks = run_graph(specs)
+    check_ordering(specs, events)
+    for t in tasks:
+        assert max_deliveries(t) <= N_FLAGS
+
+
+def test_independent_tasks_all_run():
+    specs = [{} for _ in range(50)]
+    events, _ = run_graph(specs)
+    assert len(events) == 50
+
+
+def test_multi_address():
+    specs = [{"writes": ["A"]}, {"writes": ["B"]},
+             {"reads": ["A", "B"]}, {"writes": ["A", "B"]}]
+    events, _ = run_graph(specs)
+    check_ordering(specs, events)
+
+
+def test_reduction_group_concurrent_and_ordered():
+    specs = ([{"writes": ["S"]}] +
+             [{"reductions": [("S", "+")]} for _ in range(4)] +
+             [{"reads": ["S"]}])
+    events, _ = run_graph(specs)
+    check_ordering(specs, events)
+
+
+def test_mixed_reduction_ops_serialize():
+    specs = [{"reductions": [("S", "+")]}, {"reductions": [("S", "max")]},
+             {"reductions": [("S", "+")]}]
+    events, _ = run_graph(specs)
+    check_ordering(specs, events)
+
+
+def test_nesting_blocks_successor():
+    rt = TaskRuntime(n_workers=4)
+    seen = []
+    with rt:
+        def parent():
+            for j in range(3):
+                rt.spawn(lambda j=j: (time.sleep(0.002),
+                                      seen.append(("child", j))),
+                         reads=["B"])
+        rt.spawn(parent, writes=["B"])
+        rt.spawn(lambda: seen.append(("after",)), writes=["B"])
+        assert rt.barrier(timeout=30)
+    assert seen[-1] == ("after",)
+    assert len(seen) == 4
+
+
+@st.composite
+def graph_strategy(draw):
+    n_tasks = draw(st.integers(2, 14))
+    addrs = ["A", "B", "C"]
+    specs = []
+    for _ in range(n_tasks):
+        spec = {"reads": [], "writes": [], "reductions": []}
+        for a in addrs:
+            kind = draw(st.sampled_from(["none", "none", "read", "write",
+                                         "red+"]))
+            if kind == "read":
+                spec["reads"].append(a)
+            elif kind == "write":
+                spec["writes"].append(a)
+            elif kind == "red+":
+                spec["reductions"].append((a, "+"))
+        specs.append(spec)
+    return specs
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(graph_strategy(), st.sampled_from(["waitfree", "locked"]))
+def test_property_random_graphs(specs, deps):
+    events, tasks = run_graph(specs, deps=deps)
+    check_ordering(specs, events)
+    if deps == "waitfree":
+        for t in tasks:
+            assert max_deliveries(t) <= N_FLAGS
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(graph_strategy(),
+       st.sampled_from(["delegation", "global-lock", "work-stealing"]))
+def test_property_schedulers(specs, scheduler):
+    events, _ = run_graph(specs, scheduler=scheduler)
+    check_ordering(specs, events)

@@ -1,0 +1,69 @@
+"""HLO cost-model parser: unit tests on synthetic HLO + an end-to-end check
+that scan trip counts multiply costs."""
+import textwrap
+
+from repro.launch.hlo_cost import HloCostModel, parse_module, type_bytes
+
+SYNTH = textwrap.dedent("""\
+    HloModule test, num_partitions=4
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+      %w = f32[8,8]{1,0} constant({...})
+      %dot.1 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%dot.1), replica_groups={{0,1},{2,3}}, to_apply=%add
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ar)
+    }
+
+    %cond (p2: (s32[], f32[8,8])) -> pred[] {
+      %p2 = (s32[], f32[8,8]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+      %a = f32[8,8]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %init = (s32[], f32[8,8]) tuple(%z, %a)
+      %w2 = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[8,8]{1,0} get-tuple-element(%w2), index=1
+    }
+""")
+
+
+def test_type_bytes():
+    assert type_bytes("f32[8,8]{1,0}") == 256
+    assert type_bytes("bf16[2,3]") == 12
+    assert type_bytes("(s32[], f32[8,8])") == 4 + 256
+    assert type_bytes("pred[]") == 1
+
+
+def test_parse_module_structure():
+    comps, entry = parse_module(SYNTH)
+    assert entry == "main"
+    assert set(comps) == {"body", "cond", "main"}
+    assert any(i.opcode == "while" for i in comps["main"].instrs)
+
+
+def test_trip_count_multiplies():
+    m = HloCostModel(SYNTH, 4)
+    c = m.total()
+    # dot: 2*8*8*8 = 1024 flops, x10 trips
+    assert c.flops >= 1024 * 10
+    assert c.flops < 1024 * 10 + 10_000
+    # all-reduce: 256 bytes operand, group=2 -> 2*(1/2)*256=256 wire, x10
+    assert abs(c.wire_bytes - 2560) < 1e-6
+    assert c.wire_by_group[2] == 2560
+
+
+def test_collective_group_parsing():
+    from repro.launch.hlo_cost import _GROUPS_IOTA_RE, _GROUPS_LIST_RE
+    assert _GROUPS_LIST_RE.search(
+        "all-reduce(...), replica_groups={{0,1,2,3}}").group(1) == "0,1,2,3"
+    m = _GROUPS_IOTA_RE.search("replica_groups=[32,16]<=[512]")
+    assert m.group(2) == "16"

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests (reduced configs): one forward + one train
+step on CPU, asserting shapes and finiteness; prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import TrainConfig, init_train_state, make_train_step
+from repro.models import forward, init_params
+from repro.models.api import loss_fn, shift_labels
+from repro.models.common import NULL_SHARDER
+from repro.optim import AdamWConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(
+            KEY, (B, S // cfg.encoder_frames_ratio, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux, _ = forward(cfg, params, batch, mode="train")
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    labels, mask = shift_labels(batch["tokens"])
+    loss, _ = loss_fn(cfg, logits, labels, mask)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=2))
+    state = init_train_state(cfg, KEY, tc.optimizer)
+    step = jax.jit(make_train_step(cfg, NULL_SHARDER, tc))
+    state2, metrics = step(state, _batch(cfg))
+    assert int(state2["step"]) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert metrics["grad_norm"] > 0.0  # params received gradients
+    for leaf in jax.tree_util.tree_leaves(state2["params"])[:3]:
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=64.0)  # dropless
+    params = init_params(cfg, KEY)
+    B, S, T = 2, 16, 32
+    batch = _batch(cfg, B, S)
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab_size)
+    full = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    logits_full, _, _ = forward(cfg, params, full, mode="train")
+    _, _, cache = forward(cfg, params, batch, mode="prefill")
+
+    def pad(x):
+        w = [(0, 0)] * x.ndim
+        w[2] = (0, T - S)
+        return jnp.pad(x, w)
+
+    if cfg.family in ("dense", "moe", "encdec"):
+        cache = {k: (pad(v) if k in ("k", "v") else v)
+                 for k, v in cache.items()}
+    elif cfg.family == "hybrid":
+        cache["attn"] = {k: pad(v) for k, v in cache["attn"].items()}
+    d_logits, _, _ = forward(cfg, params, {"tokens": nxt}, mode="decode",
+                             cache=cache, cache_pos=S)
+    err = float(jnp.max(jnp.abs(logits_full[:, S, :] - d_logits[:, -1, :])))
+    assert err < 2e-2, err
+
+
+def test_param_counts_close_to_published():
+    """Full configs should land near the published model sizes."""
+    import math
+    from repro.models.params import param_count_exact
+    targets = {  # (published-ish total params, tolerance)
+        "starcoder2_3b": (3.0e9, 0.25),
+        "qwen2_5_14b": (14.7e9, 0.25),
+        "gemma2_27b": (27.2e9, 0.35),
+        "qwen3_1_7b": (1.7e9, 0.40),
+        "deepseek_moe_16b": (16.4e9, 0.25),
+        "qwen2_moe_a2_7b": (14.3e9, 0.30),
+        "chameleon_34b": (34e9, 0.25),
+        "mamba2_1_3b": (1.3e9, 0.30),
+        "whisper_tiny": (39e6, 0.60),
+        "zamba2_7b": (7.4e9, 0.35),
+    }
+    for arch, (target, tol) in targets.items():
+        n = param_count_exact(get_config(arch))
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_gemma2_local_global_masks_differ():
+    cfg = get_config("gemma2_27b", smoke=True)
+    params = init_params(cfg, KEY)
+    B, S = 1, 24  # longer than window (8)
+    batch = {"tokens": jnp.arange(S)[None] % cfg.vocab_size}
+    logits, _, _ = forward(cfg, params, batch, mode="train")
+    # degenerate check: same model with window disabled produces different
+    # logits at positions beyond the window
+    cfg2 = dataclasses.replace(cfg, sliding_window=0, local_global_period=0)
+    logits2, _, _ = forward(cfg2, params, batch, mode="train")
+    assert float(jnp.max(jnp.abs(logits - logits2))) > 1e-4

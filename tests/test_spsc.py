@@ -1,0 +1,71 @@
+"""SPSC queue: order preservation, boundedness, concurrent producer/consumer."""
+import threading
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SPSCQueue
+
+
+def test_fifo_order():
+    q = SPSCQueue(8)
+    for i in range(5):
+        assert q.push(i)
+    assert [q.pop() for _ in range(5)] == [0, 1, 2, 3, 4]
+    assert q.pop() is None
+
+
+def test_capacity_bound():
+    q = SPSCQueue(4)
+    for i in range(4):
+        assert q.push(i)
+    assert not q.push(99)
+    assert q.pop() == 0
+    assert q.push(4)
+
+
+def test_concurrent_producer_consumer():
+    q = SPSCQueue(64)
+    N = 20_000
+    out = []
+
+    def producer():
+        i = 0
+        while i < N:
+            if q.push(i):
+                i += 1
+
+    def consumer():
+        while len(out) < N:
+            v = q.pop()
+            if v is not None:
+                out.append(v)
+
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start(); tc.start()
+    tp.join(timeout=60); tc.join(timeout=60)
+    assert out == list(range(N))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["push", "pop"]), max_size=200))
+def test_property_queue_model(ops):
+    """SPSC behaves like a bounded FIFO (single-threaded model check)."""
+    from collections import deque
+    q = SPSCQueue(8)
+    model = deque()
+    n = 0
+    for op in ops:
+        if op == "push":
+            ok = q.push(n)
+            if len(model) < 8:
+                assert ok
+                model.append(n)
+            else:
+                assert not ok
+            n += 1
+        else:
+            got = q.pop()
+            want = model.popleft() if model else None
+            assert got == want
+    assert len(q) == len(model)

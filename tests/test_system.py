@@ -1,0 +1,70 @@
+"""System-level behaviour of the paper's runtime: the creator/worker regime,
+pool ablation effects, tracer overhead path, runtime stats."""
+import threading
+import time
+
+from repro.core import TaskRuntime, Tracer
+
+
+def test_single_creator_many_workers_throughput_regime():
+    """The paper's critical regime: one creator feeding N workers through
+    the delegation scheduler; everything must drain."""
+    rt = TaskRuntime(n_workers=4, scheduler="delegation").start()
+    done = []
+    lock = threading.Lock()
+    N = 2000
+    for i in range(N):
+        rt.spawn(lambda i=i: done.append(i), name=f"t{i}")
+    assert rt.barrier(timeout=120)
+    rt.shutdown()
+    assert len(done) == N
+
+
+def test_pool_reuses_tasks():
+    rt = TaskRuntime(n_workers=2, use_pool=True).start()
+    for _wave in range(3):
+        for _ in range(100):
+            rt.spawn(lambda: None)
+        rt.barrier(timeout=60)  # finished objects return to the pool
+    stats = rt.stats()
+    rt.shutdown()
+    assert stats["pool"]["reuses"] > 0
+
+
+def test_no_pool_ablation():
+    rt = TaskRuntime(n_workers=2, use_pool=False).start()
+    for _ in range(100):
+        rt.spawn(lambda: None)
+    rt.barrier(timeout=60)
+    stats = rt.stats()
+    rt.shutdown()
+    assert stats["pool"]["reuses"] == 0
+
+
+def test_tracer_records_lifecycle(tmp_path):
+    tracer = Tracer(enabled=True, out_dir=str(tmp_path))
+    rt = TaskRuntime(n_workers=2, tracer=tracer).start()
+    for _ in range(20):
+        rt.spawn(lambda: None)
+    rt.barrier(timeout=60)
+    rt.shutdown()
+    counts = tracer.counts()
+    assert counts.get("task.create", 0) == 20
+    assert counts.get("task.end", 0) == 20
+    out = tracer.flush()
+    assert out is not None
+    import os, json
+    meta = json.load(open(os.path.join(out, "metadata.json")))
+    assert meta["workers"]
+
+
+def test_task_exception_surfaces():
+    rt = TaskRuntime(n_workers=2).start()
+    rt.spawn(lambda: 1 / 0)
+    rt.barrier(timeout=30)
+    try:
+        rt.shutdown()
+        raised = False
+    except ZeroDivisionError:
+        raised = True
+    assert raised
