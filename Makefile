@@ -1,0 +1,16 @@
+# Developer entrypoints. PYTHONPATH=src matches the tier-1 verify command in
+# ROADMAP.md; no install step is needed.
+PY ?= python
+
+.PHONY: verify bench-smoke bench ci
+
+verify:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/taskbench.py --smoke
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+ci: verify bench-smoke

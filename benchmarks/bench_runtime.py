@@ -50,7 +50,7 @@ def run_one(bench: str, gran: str, rt_kwargs: dict, n_workers=3,
         n_tasks = BENCHMARKS[bench](rt, **kw)
         ok = rt.barrier(timeout=300)
         dt = time.perf_counter() - t0
-        rt.shutdown()
+        rt.shutdown(wait=ok)  # don't re-enter an unbounded barrier on fail
         assert ok, f"{bench}/{gran} did not quiesce"
         times.append(dt)
     times.sort()

@@ -197,6 +197,30 @@ BENCHMARKS = {
 }
 
 
+def smoke(n_workers: int = 3, benches=("dotprod", "cholesky", "miniamr"),
+          gran: str = "fine") -> list:
+    """Quick CI-sized sanity run: each benchmark on the full configuration
+    (delegation + wait-free deps + pool), fine granularity. Prints
+    ``bench,gran,tasks,tasks_per_s`` CSV rows and asserts quiescence."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.bench_runtime import run_one
+
+    full = dict(scheduler="delegation", deps="waitfree", use_pool=True)
+    rows = []
+    print("bench,gran,tasks,tasks_per_s")
+    for bench in benches:
+        r = run_one(bench, gran, full, n_workers=n_workers, repeats=1)
+        rows.append(r)
+        print(f"{bench},{gran},{r['tasks']},{r['tasks_per_s']:.0f}",
+              flush=True)
+    return rows
+
+
+
+
 def granularity_kwargs(name: str, gran: str) -> dict:
     """gran in {fine, medium, coarse}: scales per-task work, constant-ish
     total problem (the paper's efficiency-vs-granularity axis)."""
@@ -224,3 +248,28 @@ def granularity_kwargs(name: str, gran: str) -> dict:
                     "coarse": dict(nb=2, block=64)},
     }
     return table[name][gran]
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI run (3 benchmarks, fine granularity)")
+    ap.add_argument("--bench", default=None,
+                    help="run a single named benchmark instead")
+    ap.add_argument("--gran", default="fine",
+                    choices=("fine", "medium", "coarse"))
+    ap.add_argument("--workers", type=int, default=3)
+    args = ap.parse_args()
+    if args.bench:
+        if args.bench not in BENCHMARKS:
+            ap.error(f"unknown benchmark {args.bench!r} "
+                     f"(choose from {', '.join(BENCHMARKS)})")
+        smoke(args.workers, benches=(args.bench,), gran=args.gran)
+    elif args.smoke:
+        smoke(args.workers, gran=args.gran)
+    else:
+        smoke(args.workers, benches=tuple(BENCHMARKS), gran=args.gran)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,17 +7,18 @@ from repro.core.deps_locked import LockedDependencySystem
 from repro.core.instrument import Tracer
 from repro.core.locks import DTLock, MutexLock, PTLock, TicketLock
 from repro.core.pool import TaskPool
-from repro.core.runtime import TaskRuntime, current_task
+from repro.core.runtime import TaskGroup, TaskRuntime, current_task
 from repro.core.scheduler import (GlobalLockScheduler, SyncScheduler,
                                   UnsyncScheduler, WorkStealingScheduler)
 from repro.core.spsc import SPSCQueue
-from repro.core.task import Task
+from repro.core.task import StaleTaskError, Task, TaskRef
 
 __all__ = [
     "COMMUTATIVE", "READ", "READWRITE", "REDUCTION", "WRITE",
     "DataAccess", "DataAccessMessage", "MailBox", "WaitFreeDependencySystem",
     "LockedDependencySystem", "Tracer", "DTLock", "MutexLock", "PTLock",
-    "TicketLock", "TaskPool", "TaskRuntime", "current_task",
+    "TicketLock", "TaskPool", "TaskGroup", "TaskRuntime", "current_task",
     "GlobalLockScheduler", "SyncScheduler", "UnsyncScheduler",
-    "WorkStealingScheduler", "SPSCQueue", "Task", "max_deliveries",
+    "WorkStealingScheduler", "SPSCQueue", "StaleTaskError", "Task",
+    "TaskRef", "max_deliveries",
 ]

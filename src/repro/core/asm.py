@@ -188,6 +188,16 @@ class MailBox:
                 self.post(DataAccessMessage(p, CHILD_DONE, a, ACK_PARENT))
 
 
+def domain_key(domain, address) -> tuple:
+    """Lineage-table key for an address in a task domain. The generation
+    component is load-bearing: it makes keys immune to id() reuse when a
+    pooled domain Task object is recycled. Shared by both dependency
+    systems — the invariant must never diverge between them."""
+    if domain is None:
+        return (0, 0, address)
+    return (id(domain), domain.generation, address)
+
+
 class WaitFreeDependencySystem:
     """Lineage bookkeeping + ASM message generation (register/unregister).
 
@@ -199,11 +209,22 @@ class WaitFreeDependencySystem:
     name = "waitfree"
 
     def __init__(self):
-        self._lineages: dict = {}  # (domain_id, address) -> AtomicRef(last)
+        # (domain_id, domain_generation, address) -> AtomicRef(last access).
+        # The generation component makes keys immune to id() reuse when a
+        # pooled parent Task object is recycled; child-domain keys are also
+        # pruned at parent unregister (see unregister_task) so the table
+        # does not grow with the number of nested tasks ever spawned.
+        # Root-domain lineages ((0, 0, addr)) cannot be pruned concurrently
+        # without re-introducing a lock on the registration fast path, so
+        # they persist for the program's root address set; collect() drops
+        # them when the caller can guarantee quiescence, and callers with
+        # unbounded address streams should window their addresses (see
+        # repro.data.pipeline.batch_addr).
+        self._lineages: dict = {}
         self._lineages_lock = None  # dict ops are GIL-atomic; setdefault safe
 
     def _lineage(self, domain, address) -> AtomicRef:
-        key = (id(domain) if domain is not None else 0, address)
+        key = domain_key(domain, address)
         ref = self._lineages.get(key)
         if ref is None:
             ref = self._lineages.setdefault(key, AtomicRef(None))
@@ -215,6 +236,10 @@ class WaitFreeDependencySystem:
         task's readiness accounting is armed (task may become ready inside)."""
         parent = task.parent
         for acc in task.accesses:
+            if parent is not None:
+                # record the child-domain key on the parent so it can prune
+                # the lineage when the domain closes (GIL-atomic set.add)
+                parent._lineage_keys.add(domain_key(parent, acc.address))
             prev = self._lineage(parent, acc.address).swap(acc)
             if prev is not None:
                 # sibling successor link: written once by this registrar
@@ -260,6 +285,22 @@ class WaitFreeDependencySystem:
                     tail.parent_access = acc
                     mailbox.post(DataAccessMessage(tail, PARENT_WAIT, acc, 0))
         mailbox.deliver_all()
+        # prune this task's child-domain lineages: the body has finished, so
+        # no further registrations in this domain can occur. Messages hold
+        # direct access references — dropping table entries only affects
+        # future lookups, which cannot happen for a closed domain.
+        keys, task._lineage_keys = task._lineage_keys, set()
+        for key in keys:
+            self._lineages.pop(key, None)
+
+    def collect(self) -> int:
+        """Drop all lineage bookkeeping. Safe ONLY while no task is live and
+        no spawn is in flight (quiescent runtime): any chain tail is then
+        fully satisfied, so a later registration to the same address starts
+        a correct fresh lineage. Returns the number of entries dropped."""
+        n = len(self._lineages)
+        self._lineages.clear()
+        return n
 
 
 def max_deliveries(task) -> int:

@@ -5,6 +5,15 @@ lists — the "previous implementation" the paper's wait-free design replaces
 Semantics match the ASM system for sibling chains (RAW/WAR/WAW, concurrent
 reads, same-op reduction groups) and parent/child nesting. One lock per
 address lineage; a global lock guards the lineage table itself.
+
+Lifecycle hygiene: lineage keys carry the domain task's generation (so a
+recycled parent Task object can never alias a dead domain), lookups use a
+double-checked pattern under ``_table_lock``, and lineages whose entry list
+drains are marked dead and pruned from the table so it does not grow with
+the total number of addresses ever touched. Lock order is always
+``_table_lock`` -> ``lineage.lock``; registration re-checks the dead flag
+under the lineage lock and retries, so a racing prune can never lose an
+entry.
 """
 from __future__ import annotations
 
@@ -12,41 +21,53 @@ import threading
 from typing import Optional
 
 from repro.core.asm import (COMMUTATIVE, READ, READWRITE, REDUCTION, WRITE,
-                            _READ_LIKE)
+                            _READ_LIKE, domain_key)
 
 
 class _Entry:
-    __slots__ = ("task", "atype", "red_op", "done", "notified")
+    __slots__ = ("task", "atype", "red_op", "done", "notified", "lineage")
 
-    def __init__(self, task, atype, red_op):
+    def __init__(self, task, atype, red_op, lineage):
         self.task = task
         self.atype = atype
         self.red_op = red_op
         self.done = False
         self.notified = False  # access_satisfied delivered
+        self.lineage = lineage  # backref: unregister never re-looks-up
 
 
 class _Lineage:
-    __slots__ = ("lock", "entries")
+    __slots__ = ("lock", "entries", "dead", "key")
 
-    def __init__(self):
+    def __init__(self, key):
         self.lock = threading.Lock()
         self.entries: list[_Entry] = []
+        self.dead = False  # pruned from the table; do not append
+        self.key = key
 
 
 class LockedDependencySystem:
     name = "locked"
+
+    # prune drained lineages only once the table is this large: keeps the
+    # global _table_lock off the common unregister path while still bounding
+    # growth on unbounded address streams
+    PRUNE_THRESHOLD = 1024
 
     def __init__(self):
         self._table: dict = {}
         self._table_lock = threading.Lock()
 
     def _lineage(self, domain, address) -> _Lineage:
-        key = (id(domain) if domain is not None else 0, address)
-        lin = self._table.get(key)
-        if lin is None:
-            with self._table_lock:
-                lin = self._table.setdefault(key, _Lineage())
+        key = domain_key(domain, address)
+        lin = self._table.get(key)  # GIL-atomic snapshot (fast path)
+        if lin is not None and not lin.dead:
+            return lin
+        with self._table_lock:  # double-checked: re-read under the lock
+            lin = self._table.get(key)
+            if lin is None or lin.dead:
+                lin = _Lineage(key)
+                self._table[key] = lin
         return lin
 
     @staticmethod
@@ -83,26 +104,55 @@ class LockedDependencySystem:
     def register_task(self, task, mailbox=None):
         notify = []
         for acc in task.accesses:
-            lin = self._lineage(task.parent, acc.address)
-            with lin.lock:
-                e = _Entry(task, acc.atype, acc.red_op)
-                acc.successor = e  # reuse slot to find entry at unregister
-                lin.entries.append(e)
-                notify.extend(self._scan_ready(lin))
+            while True:
+                lin = self._lineage(task.parent, acc.address)
+                with lin.lock:
+                    if lin.dead:  # pruned between lookup and lock: retry
+                        continue
+                    e = _Entry(task, acc.atype, acc.red_op, lin)
+                    acc.successor = e  # reuse slot to find entry at unregister
+                    lin.entries.append(e)
+                    notify.extend(self._scan_ready(lin))
+                break
         for e in notify:
             e.task.access_satisfied(None)
         task.registration_done()
 
     def unregister_task(self, task, mailbox=None):
         notify = []
+        drained = []
         for acc in task.accesses:
-            lin = self._lineage(task.parent, acc.address)
+            e = acc.successor
+            lin = e.lineage
             with lin.lock:
-                e = acc.successor
                 e.done = True
                 # prune completed prefix to bound list growth
                 while lin.entries and lin.entries[0].done:
                     lin.entries.pop(0)
                 notify.extend(self._scan_ready(lin))
+                if not lin.entries:
+                    drained.append(lin)
         for e in notify:
             e.task.access_satisfied(None)
+        if drained and len(self._table) > self.PRUNE_THRESHOLD:
+            for lin in drained:
+                # lock order: table lock first, then lineage lock (matches
+                # _lineage); re-check emptiness — a concurrent register may
+                # have appended since we released the lineage lock
+                with self._table_lock:
+                    with lin.lock:
+                        if not lin.entries and not lin.dead:
+                            lin.dead = True
+                            if self._table.get(lin.key) is lin:
+                                del self._table[lin.key]
+
+    def collect(self) -> int:
+        """Quiescent-only GC: drop every lineage (see the wait-free system's
+        collect for the contract). Returns the number of entries dropped."""
+        with self._table_lock:
+            n = len(self._table)
+            for lin in self._table.values():
+                with lin.lock:
+                    lin.dead = True
+            self._table.clear()
+        return n

@@ -5,18 +5,69 @@ This is the paper's runtime assembled from its components:
                    (wait-free | locked) dependency system
   worker loop   -> scheduler.get_ready_task (delegation / global-lock /
                    work-stealing), run, unregister -> successors become ready
-  taskwait()    -> block until a task (and its children) are done
+  taskwait()    -> block until a task's body is done (generation-safe)
+  task_group()  -> TaskGroup: await a whole spawn set + subtrees without
+                   retaining any Task object
   barrier()     -> block until the runtime is quiescent
 
 Ablation knobs mirror the paper's §6 variants:
   deps="waitfree"|"locked", scheduler="delegation"|"global-lock"|
   "work-stealing", use_pool=True|False.
+
+Task lifecycle & ownership contract (spawn / retain / taskwait)
+---------------------------------------------------------------
+Every task carries a *completion token* count: one token for its body plus
+one per live child (added at child spawn, dropped when the child fully
+finishes). A task is *fully finished* only at token count zero — its whole
+subtree is done — and only then is it counted out of the live set, handed to
+its TaskGroup, retired (generation bump) and released to the pool. This
+unifies what used to be two protocols (deferred unregister for locked deps,
+immediate release for wait-free deps) and closes the lifetime hole where a
+wait-free-mode parent could be recycled while its children still pointed at
+it.
+
+Who may hold a Task and for how long:
+
+* ``spawn(...)`` returns the live ``Task``. The reference is guaranteed to
+  denote that logical task only until the task's subtree completes; after
+  that the pool may recycle the object. Holding it longer is *detected*, not
+  undefined: every recycle bumps ``task.generation``.
+* ``spawn(..., retain=True)`` opts the task out of pooling. The caller may
+  keep the object indefinitely and read ``result`` / ``exception`` after
+  completion. This is the required pattern for reading outputs.
+* ``spawn(..., handle=True)`` returns a ``TaskRef`` stamped with the spawn
+  generation *before* the task can run — the durable way to wait on a pooled
+  task: ``taskwait(ref)`` returns immediately (True) if the logical task
+  already finished and was recycled, instead of blocking on the recycled
+  object's next occupant.
+* ``taskwait(task_or_ref)`` waits for *body* completion. With a ``TaskRef``
+  the spawn-time generation makes recycling fully detectable. With a bare
+  ``Task`` the generation is captured at call time: recycling *during* the
+  wait is detected (no orphaned-event hang), but recycling that happened
+  *before* the call is indistinguishable from a fresh task — the wait then
+  tracks the object's new occupant. Callers that may race completion must
+  use ``handle=True`` (or ``retain=True``).
+* ``task_group()`` returns a :class:`TaskGroup`; tasks spawned through it
+  are accounted in the group, and ``group.wait()`` blocks until every one of
+  them (including their nested subtrees, via completion tokens) fully
+  finished — no Task references retained anywhere.
+
+Errors: a failed task's exception is recorded (under a lock) and re-raised
+by ``shutdown()`` / ``TaskGroup.wait()``. The error list is cleared on
+raise, so a runtime (or group) is reusable after a failure; sibling errors
+ride along on the raised exception's ``errors`` attribute.
+
+Idle workers park on a condition variable (no sleep-spinning): a worker that
+polls an empty scheduler a few times publishes itself as parked and blocks;
+``add_ready_task`` wakes parked workers through an eventcount (sequence
+number + notify), with a short timed fallback so a lost wakeup costs a
+bounded delay rather than a hang.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable, Optional, Union
 
 from repro.core.asm import MailBox, WaitFreeDependencySystem
 from repro.core.atomic import AtomicU64
@@ -24,13 +75,124 @@ from repro.core.deps_locked import LockedDependencySystem
 from repro.core.instrument import Tracer
 from repro.core.pool import TaskPool
 from repro.core.scheduler import SCHEDULER_KINDS
-from repro.core.task import DONE, Task
+from repro.core.task import DONE, Task, TaskRef
 
 _current_task = threading.local()
+
+# worker parking knobs: how many empty polls before parking, and the timed
+# backstop so a (theoretically possible) lost wakeup is a bounded delay
+_PARK_AFTER_SPINS = 20
+_PARK_TIMEOUT_S = 0.05
 
 
 def current_task() -> Optional[Task]:
     return getattr(_current_task, "t", None)
+
+
+class TaskGroup:
+    """Await a set of tasks (and their subtrees) without retaining them.
+
+    Producer-side accounting is two atomic counters — no locks on the spawn
+    or completion fast path; ``wait`` blocks on an event armed exactly when
+    the outstanding count leaves / reaches zero.
+    """
+
+    def __init__(self, runtime: "TaskRuntime", name: str = ""):
+        self._rt = runtime
+        self.name = name
+        self._outstanding = AtomicU64(0)
+        self._spawned = AtomicU64(0)
+        self._idle = threading.Event()
+        self._idle.set()
+        # serializes the event arm/disarm against the count it reflects:
+        # taken only on 0<->1 boundary transitions, never on the steady path
+        self._event_lock = threading.Lock()
+        self._errors: list[BaseException] = []
+        self._errors_lock = threading.Lock()
+
+    # -- spawn-side ----------------------------------------------------
+    def spawn(self, fn: Callable, args: tuple = (), kwargs=None, **kw) -> Task:
+        return self._rt.spawn(fn, args, kwargs, group=self, **kw)
+
+    def _attach(self, task: Task):
+        self._spawned.fetch_add(1)
+        if self._outstanding.fetch_add(1) == 0:
+            with self._event_lock:  # re-check: a racing done may have set()
+                if self._outstanding.load() > 0:
+                    self._idle.clear()
+
+    # -- completion-side (called by the runtime at full finish) --------
+    def _task_done(self, task: Task):
+        if task.exception is not None:
+            with self._errors_lock:
+                self._errors.append(task.exception)
+        if self._outstanding.fetch_add(-1) == 1:
+            with self._event_lock:  # re-check: a racing spawn re-armed
+                if self._outstanding.load() == 0:
+                    self._idle.set()
+
+    # -- consumer ------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        return self._outstanding.load()
+
+    def wait(self, timeout: Optional[float] = None,
+             raise_errors: bool = True) -> bool:
+        """Block until every task spawned through this group fully finished
+        (subtrees included). Returns False on timeout. Re-raises the first
+        collected task error (clearing the list) when raise_errors is set."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            budget = None if deadline is None else deadline - time.monotonic()
+            if budget is not None and budget <= 0:
+                if self._outstanding.load() != 0:
+                    return False
+                if raise_errors:
+                    self.raise_errors()
+                return True
+            if not self._idle.wait(budget):
+                return False
+            if self._outstanding.load() == 0:
+                if raise_errors:
+                    self.raise_errors()
+                return True
+            # the event was re-armed by a concurrent spawn between set() and
+            # clear(); yield and re-wait on the (soon cleared) event
+            time.sleep(0)
+
+    def raise_errors(self):
+        with self._errors_lock:
+            errs, self._errors = self._errors, []
+        if errs:
+            raise _attach_siblings(errs)
+
+    @property
+    def errors(self) -> tuple:
+        with self._errors_lock:
+            return tuple(self._errors)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.wait(raise_errors=exc_type is None)
+
+    def __repr__(self):
+        return (f"TaskGroup({self.name!r}, pending={self.pending}, "
+                f"spawned={self._spawned.load()})")
+
+
+def _attach_siblings(errs: list) -> BaseException:
+    """Primary error carries the rest: ``errors`` attribute + __context__."""
+    primary = errs[0]
+    try:
+        primary.errors = tuple(errs)
+        if len(errs) > 1 and errs[1] is not primary \
+                and primary.__context__ is None:
+            primary.__context__ = errs[1]
+    except Exception:
+        pass  # exceptions with __slots__ / frozen attrs: best effort
+    return primary
 
 
 class TaskRuntime:
@@ -66,6 +228,12 @@ class TaskRuntime:
         self._started = False
         self._mailboxes = threading.local()
         self._errors: list[BaseException] = []
+        self._errors_lock = threading.Lock()
+        # worker parking: eventcount (seq + cond); _n_parked is read racily
+        # on the producer fast path (bounded by the timed park fallback)
+        self._park_cond = threading.Condition(threading.Lock())
+        self._park_seq = 0
+        self._n_parked = 0
 
     # ---------------------------------------------------------------- infra
     def _mailbox(self) -> MailBox:
@@ -82,6 +250,7 @@ class TaskRuntime:
         if self._started:
             return self
         self._started = True
+        self._stop = False
         for wid in range(self.n_workers):
             t = threading.Thread(target=self._worker, args=(wid,),
                                  name=f"repro-worker-{wid}", daemon=True)
@@ -93,12 +262,25 @@ class TaskRuntime:
         if wait:
             self.barrier()
         self._stop = True
+        self._wake_workers(all_workers=True)
         for t in self._threads:
             t.join(timeout=5)
         self._threads.clear()
         self._started = False
-        if self._errors:
-            raise self._errors[0]
+        if self._quiescent.is_set():
+            self.collect()
+        with self._errors_lock:
+            errs, self._errors = self._errors, []
+        if errs:
+            raise _attach_siblings(errs)
+
+    def collect(self) -> int:
+        """Prune dependency-system lineage bookkeeping. Safe only while the
+        runtime is quiescent AND the caller guarantees no spawn is in flight
+        (single-creator programs between phases). No-op otherwise."""
+        if not self._quiescent.is_set():
+            return 0
+        return self.deps.collect()
 
     def __enter__(self):
         return self.start()
@@ -111,8 +293,14 @@ class TaskRuntime:
               name: str = "", reads: Iterable = (), writes: Iterable = (),
               rw: Iterable = (), reductions: Iterable = (),
               commutative: Iterable = (), affinity: Optional[int] = None,
-              parent: Optional[Task] = None, retain: bool = False) -> Task:
-        if parent is None:
+              parent: Optional[Task] = None, retain: bool = False,
+              group: Optional[TaskGroup] = None, detached: bool = False,
+              handle: bool = False) -> Union[Task, TaskRef]:
+        # detached=True spawns a root task even from inside a running task:
+        # self-perpetuating loops (e.g. the serve decode chain) must NOT
+        # parent each iteration on the previous one, or completion tokens
+        # keep the whole chain alive and no task is ever recycled
+        if parent is None and not detached:
             parent = current_task()
         task = self.pool.acquire()
         task.init(fn, args, kwargs, name=name, parent=parent, reads=reads,
@@ -120,18 +308,25 @@ class TaskRuntime:
                   commutative=commutative, affinity=affinity)
         if retain:
             task.pooled = False  # caller reads .result after completion
+        task.group = group
         task.on_ready = self._task_ready
         task.created_ns = time.monotonic_ns()
+        # the ref must be stamped before the task is published to the
+        # dependency system: once registered it may run, finish and be
+        # recycled before spawn even returns
+        ref = TaskRef(task) if handle else None
+        if parent is not None:
+            parent._completion.fetch_add(1)  # spawner's body token is held
+        if group is not None:
+            group._attach(task)
         if self._live.fetch_add(1) == 0:
             self._quiescent.clear()
-        if self._defer_unregister:
-            # completion token: 1 for the body + 1 per live child
-            task._live_children.store(1)
-            if parent is not None:
-                parent._live_children.fetch_add(1)
         self.tracer.event("task.create", task.task_id)
         self.deps.register_task(task, self._mailbox())
-        return task
+        return ref if handle else task
+
+    def task_group(self, name: str = "") -> TaskGroup:
+        return TaskGroup(self, name)
 
     def _task_ready(self, task: Task):
         task.ready_ns = time.monotonic_ns()
@@ -142,22 +337,38 @@ class TaskRuntime:
         else:
             self.scheduler.add_ready_task(
                 task, numa_hint=task.affinity or 0)
+        self._wake_workers()
 
     # ---------------------------------------------------------------- work
-    def _finish(self, task: Task):
-        """Called when the task body is done and, in deferred mode, the
-        completion token dropped to zero (all children fully finished)."""
-        self.deps.unregister_task(task, self._mailbox())
-        self.tracer.event("dep.unregister", task.task_id)
+    def _drop_token(self, task: Task):
+        """Drop one completion token; at zero the task is fully finished.
+        Iterative (not recursive) so deep nesting chains cannot overflow."""
+        t: Optional[Task] = task
+        while t is not None:
+            if t._completion.fetch_add(-1) != 1:
+                return
+            t = self._finalize(t)
+
+    def _finalize(self, task: Task) -> Optional[Task]:
+        """All completion tokens dropped: the task and its whole subtree are
+        done. Returns the parent (whose child token the caller must drop)."""
+        if self._defer_unregister:
+            # locked deps: conservative nesting — successors become ready
+            # only once the full subtree completed
+            self.deps.unregister_task(task, self._mailbox())
+            self.tracer.event("dep.unregister", task.task_id)
         parent = task.parent
+        group = task.group
         if task.exception is not None:
-            self._errors.append(task.exception)
+            with self._errors_lock:
+                self._errors.append(task.exception)
+        if group is not None:
+            group._task_done(task)
         if self._live.fetch_add(-1) == 1:
             self._quiescent.set()
-        if parent is not None and self._defer_unregister:
-            if parent._live_children.fetch_add(-1) == 1:
-                self._finish(parent)
+        task.retire()  # stamp the recycling epoch before the pool can reuse
         self.pool.release(task)
+        return parent
 
     def _run_task(self, task: Task, wid: int):
         _current_task.t = task
@@ -167,31 +378,93 @@ class TaskRuntime:
         task.end_ns = time.monotonic_ns()
         self.tracer.event("task.end", task.task_id)
         _current_task.t = None
-        if self._defer_unregister:
-            if task._live_children.fetch_add(-1) == 1:
-                self._finish(task)
-        else:
-            self._finish(task)
+        if not self._defer_unregister:
+            # wait-free deps: TASK_DONE must flow at body completion; the
+            # ASM child bits gate successors on nested children, while the
+            # runtime-level completion tokens gate recycling on them
+            self.deps.unregister_task(task, self._mailbox())
+            self.tracer.event("dep.unregister", task.task_id)
+        self._drop_token(task)
+
+    # -------------------------------------------------------------- parking
+    def _wake_workers(self, all_workers: bool = False):
+        if self._n_parked or all_workers:  # racy read: bounded by park timeout
+            with self._park_cond:
+                self._park_seq += 1
+                if all_workers:
+                    self._park_cond.notify_all()
+                else:
+                    self._park_cond.notify()
 
     def _worker(self, wid: int):
         _current_task.wid = wid
-        idle_spins = 0
+        spins = 0
         while not self._stop:
             task = self.scheduler.get_ready_task(wid)
-            if task is None:
-                idle_spins += 1
-                self.tracer.event("worker.idle", wid)
-                time.sleep(0 if idle_spins < 100 else 0.0005)
+            if task is not None:
+                spins = 0
+                self._run_task(task, wid)
                 continue
-            idle_spins = 0
-            self._run_task(task, wid)
+            spins += 1
+            if spins < _PARK_AFTER_SPINS:
+                self.tracer.event("worker.idle", wid)
+                time.sleep(0)  # yield once before escalating to a park
+                continue
+            # publish parked, then re-poll: a producer that missed the
+            # published count has enqueued before our re-poll and is seen
+            with self._park_cond:
+                seq = self._park_seq
+                self._n_parked += 1
+            task = self.scheduler.get_ready_task(wid)
+            if task is not None:
+                with self._park_cond:
+                    self._n_parked -= 1
+                spins = 0
+                self._run_task(task, wid)
+                continue
+            self.tracer.event("worker.park", wid)
+            with self._park_cond:
+                if self._park_seq == seq and not self._stop:
+                    self._park_cond.wait(timeout=_PARK_TIMEOUT_S)
+                self._n_parked -= 1
+            spins = 0
 
     # ---------------------------------------------------------------- sync
-    def taskwait(self, task: Task, timeout: Optional[float] = None) -> bool:
-        ev = task.wait_handle()
-        if task.state == DONE:
+    def taskwait(self, task: Union[Task, TaskRef],
+                 timeout: Optional[float] = None) -> bool:
+        """Wait for the task's body to finish. With a TaskRef (stamped at
+        spawn) recycling is fully detected: returns True immediately when
+        the logical task already finished, never blocking on the object's
+        next occupant. With a bare Task the generation is captured HERE, so
+        recycling during the wait is detected (no orphaned-event hang), but
+        a recycle that happened before the call makes this wait on the new
+        occupant — spawn with handle=True when that race is possible."""
+        if isinstance(task, TaskRef):
+            t, gen = task.task, task.generation
+        else:
+            t, gen = task, task.generation
+
+        def finished() -> bool:
+            return t.generation != gen or t.state == DONE
+
+        if finished():
             return True
-        return ev.wait(timeout)
+        ev = t.wait_handle()
+        if finished():  # completion may have raced wait_handle installation
+            return True
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            slice_s = _PARK_TIMEOUT_S
+            if deadline is not None:
+                slice_s = min(slice_s, deadline - time.monotonic())
+                if slice_s <= 0:
+                    return finished()
+            if ev.wait(slice_s):
+                # the event belongs to whatever occupies the object now; our
+                # logical task is done either way (set, or generation moved)
+                return True
+            if finished():
+                return True
 
     def barrier(self, timeout: Optional[float] = None) -> bool:
         """Wait until all spawned tasks (incl. nested) fully finished."""
@@ -201,4 +474,5 @@ class TaskRuntime:
     def stats(self) -> dict:
         return {"pool": self.pool.stats,
                 "pending": self.scheduler.pending(),
-                "live": self._live.load()}
+                "live": self._live.load(),
+                "parked": self._n_parked}

@@ -19,7 +19,7 @@ import threading
 from collections import deque
 from typing import Optional
 
-from repro.core.locks import DTLock, MutexLock, PTLock
+from repro.core.locks import DTLock, MutexLock, PTLock, spin
 from repro.core.spsc import SPSCQueue
 
 
@@ -57,11 +57,19 @@ class UnsyncScheduler:
 
 
 class SyncScheduler:
-    """Paper Listing 5: SPSC buffers + DTLock delegation."""
+    """Paper Listing 5: SPSC buffers + DTLock delegation.
+
+    Producer-side progress guarantee: when a producer's SPSC buffer is full
+    it first spins a bounded number of times (retry push / opportunistic
+    try_lock-and-drain); once the budget is exhausted it joins the DTLock
+    ticket queue as a plain waiter — FIFO ownership is guaranteed, so the
+    producer inserts directly into the policy container instead of
+    livelocking behind a busy lock owner that never drains its buffer.
+    """
 
     def __init__(self, n_workers: int, policy: str = "fifo",
                  n_numa: int = 1, spsc_capacity: int = 256,
-                 instrument=None):
+                 instrument=None, max_add_spins: int = 64):
         self.n_workers = n_workers
         self._sched = UnsyncScheduler(policy)
         size = max(64, 2 * n_workers)
@@ -70,34 +78,49 @@ class SyncScheduler:
         self._add_queues = [SPSCQueue(spsc_capacity) for _ in range(self._numa)]
         self._add_locks = [PTLock(size) for _ in range(self._numa)]
         self._instr = instrument
+        self._max_add_spins = max_add_spins
 
     # -- producer side ------------------------------------------------
     def add_ready_task(self, task, numa_hint: int = 0):
         q = self._add_queues[numa_hint % self._numa]
         lk = self._add_locks[numa_hint % self._numa]
+        spins = 0
         while True:
-            lk.lock()
-            added = q.push(task)
-            lk.unlock()
-            if added:
-                return
-            # buffer full: try to become the scheduler server and drain
+            if not q.full:  # racy pre-check skips the lock when doomed
+                lk.lock()
+                added = q.push(task)
+                lk.unlock()
+                if added:
+                    return
+            # buffer full: try to become the scheduler server and insert
+            # directly (also drains every buffer + serves waiting workers)
             if self._lock.try_lock():
-                self._process_ready_tasks()
-                self._lock.unlock()
+                self._insert_direct(task)
+                return
+            spins += 1
+            if spins >= self._max_add_spins:
+                # bounded backoff exhausted: block as a regular ticket
+                # waiter (FIFO => guaranteed ownership) and direct-serve
+                if self._instr:
+                    self._instr.event("sched.add_fallback", numa_hint)
+                self._lock.lock()
+                self._insert_direct(task)
+                return
+            spin()
+
+    def _insert_direct(self, task):
+        """Called with the DTLock held: drain buffers, insert the task into
+        the policy container, serve delegating waiters, release."""
+        self._process_ready_tasks()
+        self._sched.add_ready_task(task)
+        self._serve_waiters()
+        self._lock.unlock()
 
     def _process_ready_tasks(self):
         for q in self._add_queues:
             q.consume_all(self._sched.add_ready_task)
 
-    # -- consumer side ------------------------------------------------
-    def get_ready_task(self, worker_id: int):
-        acquired, item = self._lock.lock_or_delegate(worker_id)
-        if not acquired:
-            if self._instr:
-                self._instr.event("sched.delegated", worker_id)
-            return item
-        self._process_ready_tasks()
+    def _serve_waiters(self) -> int:
         served = 0
         while not self._lock.empty():
             waiting_id = self._lock.front()
@@ -109,6 +132,17 @@ class SyncScheduler:
             served += 1
         if self._instr and served:
             self._instr.event("sched.served", served)
+        return served
+
+    # -- consumer side ------------------------------------------------
+    def get_ready_task(self, worker_id: int):
+        acquired, item = self._lock.lock_or_delegate(worker_id)
+        if not acquired:
+            if self._instr:
+                self._instr.event("sched.delegated", worker_id)
+            return item
+        self._process_ready_tasks()
+        self._serve_waiters()
         task = self._sched.get_ready_task(worker_id)
         self._lock.unlock()
         return task

@@ -19,6 +19,13 @@ class SPSCQueue:
         self._head = 0  # next write index (producer-owned)
         self._tail = 0  # next read index (consumer-owned)
 
+    @property
+    def full(self) -> bool:
+        """Racy observation (safe under the GIL): used by producers to skip
+        the insertion lock when a push is known to fail — the authoritative
+        answer is still push()'s return value."""
+        return (self._head + 1) % self._cap == self._tail
+
     def push(self, item) -> bool:
         head = self._head
         nxt = (head + 1) % self._cap

@@ -3,6 +3,15 @@
 A Task owns its DataAccess array (paper Listing 1). Readiness accounting:
 ``_pending`` counts unsatisfied accesses plus one registration guard so a
 task can never become ready while its accesses are still being linked.
+
+Completion accounting (runtime PR "task lifecycle overhaul"): ``_completion``
+holds one token for the task body plus one per live child; the task is
+*fully finished* — and may be recycled by the pool — only when the count
+drops to zero. ``generation`` is a monotonically increasing recycling epoch:
+it is bumped by ``retire()`` when the runtime finalizes the task and again
+by ``reset()`` when the pool re-initializes it, so any holder of a
+``TaskRef`` (or a caller inside ``TaskRuntime.taskwait``) can detect that a
+pooled task object no longer denotes the logical task it was spawned as.
 """
 from __future__ import annotations
 
@@ -19,18 +28,24 @@ _task_ids = itertools.count(1)
 CREATED, BLOCKED, READY, RUNNING, DONE = range(5)
 
 
+class StaleTaskError(RuntimeError):
+    """A pooled Task object was recycled into a different logical task."""
+
+
 class Task:
     __slots__ = ("task_id", "fn", "args", "kwargs", "name", "accesses",
                  "parent", "_pending", "_access_map", "state", "result",
-                 "affinity", "on_ready", "_live_children", "_done_event",
+                 "affinity", "on_ready", "_completion", "_done_event",
                  "exception", "created_ns", "ready_ns", "start_ns", "end_ns",
-                 "pooled")
+                 "pooled", "generation", "group", "_lineage_keys")
 
     def __init__(self):
+        self.generation = 0
         self.reset()
 
     def reset(self):
         self.task_id = next(_task_ids)
+        self.generation += 1  # recycling epoch: never reset, only advances
         self.fn: Optional[Callable] = None
         self.args = ()
         self.kwargs = {}
@@ -44,10 +59,12 @@ class Task:
         self.exception: Optional[BaseException] = None
         self.affinity: Optional[int] = None
         self.on_ready: Optional[Callable] = None
-        self._live_children = AtomicU64(0)
+        self._completion = AtomicU64(0)
         self._done_event: Optional[threading.Event] = None
         self.created_ns = self.ready_ns = self.start_ns = self.end_ns = 0
         self.pooled = False
+        self.group = None
+        self._lineage_keys: set = set()  # child-domain lineages (deps prune)
 
     # ------------------------------------------------------------ build
     def init(self, fn, args=(), kwargs=None, *, name="", parent=None,
@@ -75,6 +92,8 @@ class Task:
         self._access_map = {a.address: a for a in accs}
         # +1 registration guard (released by registration_done)
         self._pending = AtomicU64(len(accs) + 1)
+        # completion token: 1 for the body (+1 per child added at spawn)
+        self._completion.store(1)
         self.state = BLOCKED
         return self
 
@@ -107,10 +126,71 @@ class Task:
         if ev is not None:
             ev.set()
 
+    def retire(self):
+        """Advance the recycling epoch: after this, any TaskRef stamped with
+        an older generation observes the logical task as finished."""
+        self.generation += 1
+
     def wait_handle(self) -> threading.Event:
         if self._done_event is None:
             self._done_event = threading.Event()
         return self._done_event
 
+    def ref(self) -> "TaskRef":
+        return TaskRef(self)
+
     def __repr__(self):
-        return f"Task#{self.task_id}({self.name}, state={self.state})"
+        return (f"Task#{self.task_id}({self.name}, state={self.state}, "
+                f"gen={self.generation})")
+
+
+class TaskRef:
+    """Generation-stamped handle to a (possibly pooled) task.
+
+    A bare ``Task`` returned by ``spawn`` may be recycled the moment the
+    task's subtree finishes; holding it beyond that point silently observes
+    an unrelated task. A ``TaskRef`` captures ``(task, generation)`` at spawn
+    time (``spawn(..., handle=True)``) so staleness is *detected*: ``done``
+    flips to True once the logical task finished, and ``result()`` /
+    ``error()`` raise :class:`StaleTaskError` instead of returning another
+    task's fields.
+    """
+
+    __slots__ = ("task", "generation", "task_id", "name", "pooled")
+
+    def __init__(self, task: Task):
+        self.task = task
+        self.generation = task.generation
+        self.task_id = task.task_id
+        self.name = task.name
+        # stamped at ref time: the live object's flag changes on recycle
+        self.pooled = task.pooled
+
+    @property
+    def stale(self) -> bool:
+        """The underlying object moved on (logical task fully finished)."""
+        return self.task.generation != self.generation
+
+    @property
+    def done(self) -> bool:
+        return self.stale or self.task.state == DONE
+
+    def _check_live_fields(self):
+        # Retained (non-pooled) tasks are never recycled, so their result /
+        # exception stay readable after retire(); pooled ones do get reused.
+        if self.stale and self.pooled:
+            raise StaleTaskError(
+                f"task #{self.task_id} ({self.name!r}) was recycled; "
+                "spawn with retain=True to read results after completion")
+
+    def result(self):
+        self._check_live_fields()
+        return self.task.result
+
+    def error(self) -> Optional[BaseException]:
+        self._check_live_fields()
+        return self.task.exception
+
+    def __repr__(self):
+        return (f"TaskRef#{self.task_id}({self.name}, gen={self.generation}, "
+                f"stale={self.stale})")

@@ -45,6 +45,19 @@ class TokenSource:
                             size=(batch_size, seq_len), dtype=np.int32)
 
 
+# Dependency-address window for batch resources. Steps are an unbounded
+# stream; using the raw step as the address would grow the dependency
+# system's root lineage table by one entry per step forever. Windowing is
+# safe because at most `prefetch + 1` batch tasks are ever in flight, far
+# below the window, so two live tasks can never alias an address.
+BATCH_ADDR_WINDOW = 1024
+
+
+def batch_addr(step: int) -> tuple:
+    """Dependency address of batch `step` (shared by producer + consumer)."""
+    return ("batch", step % BATCH_ADDR_WINDOW)
+
+
 class DataPipeline:
     """Prefetching pipeline: spawn_prefetch(step) -> task writing ("batch",i);
     get(step) returns the materialized batch (task result)."""
@@ -80,7 +93,7 @@ class DataPipeline:
 
     def _spawn(self, step: int):
         t = self.rt.spawn(self._produce, (step,), name=f"prefetch:{step}",
-                          writes=[("batch", step)], retain=True)
+                          writes=[batch_addr(step)], retain=True)
         self._tasks[step] = t
 
     def start(self, from_step: int = 0):

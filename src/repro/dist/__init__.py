@@ -1,0 +1,13 @@
+"""Distribution layer: logical-axis partitioning rules and cross-pod
+gradient compression. Model/step code imports only from this package so the
+sharding table lives in one place."""
+from repro.dist.compression import (compress_residual, cross_pod_mean_int8,
+                                    dequantize_int8, pod_manual_shard_map,
+                                    quantize_int8)
+from repro.dist.partitioning import make_sharder, sanitize_pspec
+
+__all__ = [
+    "compress_residual", "cross_pod_mean_int8", "dequantize_int8",
+    "pod_manual_shard_map", "quantize_int8", "make_sharder",
+    "sanitize_pspec",
+]

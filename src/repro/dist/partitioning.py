@@ -1,0 +1,85 @@
+"""Logical-axis -> mesh-axis partitioning rules (GSPMD-style).
+
+One table maps the model code's logical axis names (batch, seq, embed,
+heads, ...) to mesh axes; ``make_sharder`` instantiates a
+:class:`repro.models.common.Sharder` for a concrete mesh, and
+``sanitize_pspec`` drops assignments that a given shape cannot honour
+(non-divisible dims, repeated mesh axes, axes absent from the mesh) so
+constraints never force GSPMD into padded relayouts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import NULL_SHARDER, Sharder
+
+# logical axes sharded over the model-parallel mesh axis
+_MODEL_AXES = ("heads", "kv", "mlp", "moe_mlp", "inner", "ssm_heads",
+               "vocab", "experts")
+
+
+def _dp_axes(mesh) -> tuple:
+    """Data-parallel mesh axes, outermost first ("pod" spans DCN)."""
+    names = getattr(mesh, "axis_names", ())
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def make_sharder(mesh, *, kind: str = "train", global_batch: int = 1,
+                 seq_shard: bool = False) -> Sharder:
+    """Build the Sharder for one (mesh, workload-kind) cell.
+
+    kind="train": batch over all DP axes, weights FSDP-sharded over "data".
+    kind="prefill"/"decode": weights replicated over DP (bf16 serving
+    weights are cheap; gathers are not), batch over DP axes; seq_shard
+    additionally slices the sequence axis over "data" for single-request
+    long prefill.
+    """
+    if mesh is None or getattr(mesh, "empty", False):
+        return NULL_SHARDER
+    names = getattr(mesh, "axis_names", ())
+    dp = _dp_axes(mesh)
+    model = "model" if "model" in names else None
+
+    rules: dict = {a: model for a in _MODEL_AXES}
+    rules["batch"] = dp if len(dp) > 1 else (dp[0] if dp else None)
+    rules["seq"] = None
+    rules["layers"] = None
+    rules["state"] = None
+    if kind == "train":
+        # FSDP: shard the embed (row) dim of weights over the intra-pod DP
+        # axis; "pod" stays pure DP (gradient all-reduce over DCN)
+        rules["embed"] = "data" if "data" in names else None
+    else:
+        rules["embed"] = None
+        if seq_shard and "data" in names:
+            rules["seq"] = "data"
+            rules["batch"] = None
+    return Sharder(mesh=mesh, rules=rules, enabled=True)
+
+
+def sanitize_pspec(shape, ps, mesh) -> P:
+    """Make ``ps`` legal for ``shape`` on ``mesh``: drop axes not in the
+    mesh, axes already consumed by an earlier dim, and assignments whose
+    mesh-axis product does not divide the dim (uneven shardings trigger
+    full-rematerialization copies when einsums prefer padded layouts)."""
+    entries = list(ps) + [None] * (len(shape) - len(ps))
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes
+                     if a is not None and a in mesh.shape and a not in used)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if not axes or n <= 1 or dim % n != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)

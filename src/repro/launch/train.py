@@ -28,6 +28,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import TaskRuntime, Tracer
 from repro.data import DataPipeline, TokenSource
+from repro.data.pipeline import batch_addr
 from repro.dist.partitioning import make_sharder
 from repro.ft import HeartbeatMonitor, StragglerMitigator
 from repro.launch.mesh import make_host_mesh
@@ -84,7 +85,7 @@ class TrainEngine:
                 return {k: float(v) for k, v in metrics.items()}
 
             t = self.rt.spawn(do_step, name=f"step:{s}",
-                              reads=[("batch", s)], rw=["train_state"],
+                              reads=[batch_addr(s)], rw=["train_state"],
                               retain=True)
             self.rt.taskwait(t, timeout=600)
             if t.exception:

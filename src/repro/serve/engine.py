@@ -61,7 +61,11 @@ class ServeEngine:
         self._queue: list[Request] = []
         self._qlock = threading.Lock()
         self._stop = False
-        self._loop_task = None
+        # all engine tasks (prefills + decode iterations) run in one
+        # TaskGroup: completion tracking without retaining pooled Task
+        # objects (holding a non-retained Task across its completion is a
+        # use-after-recycle; see the TaskRuntime lifecycle contract)
+        self.group = runtime.task_group("serve")
         self._next_id = 0
         self._decode_fn = jax.jit(self._decode_batch)
         self.stats = {"prefills": 0, "decode_iters": 0, "tokens": 0}
@@ -104,9 +108,16 @@ class ServeEngine:
                 req = self._queue.pop(0)
             with self._free_lock:
                 slot = self._free.pop(0)
-            self.rt.spawn(self._prefill_task, (req, slot),
-                          name=f"prefill:{req.id}",
-                          rw=[("slot", slot)], reads=["params"])
+            # detached: prefills are admitted from inside a decode task but
+            # are not nested work of that iteration. The commutative "cache"
+            # access makes concurrent prefills mutually exclusive (the
+            # whole-tree cache splice is a read-modify-write) while leaving
+            # their order free — per-slot addresses alone would let two
+            # prefills interleave and lose one slot's KV.
+            self.group.spawn(self._prefill_task, (req, slot),
+                             name=f"prefill:{req.id}", detached=True,
+                             rw=[("slot", slot)], reads=["params"],
+                             commutative=["cache"])
 
     def _prefill_task(self, req: Request, slot: int):
         L = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
@@ -162,17 +173,33 @@ class ServeEngine:
             delay = 0.0 if live else 0.002
             if delay:
                 time.sleep(delay)
-            self._loop_task = self.rt.spawn(
-                self._decode_iter, name="decode.loop", rw=["decode"],
-                reads=["params"])
+            # detached: the loop respawns itself — parenting iteration N+1
+            # on N would chain completion tokens forever and pin every
+            # decode Task in memory until stop()
+            self.group.spawn(self._decode_iter, name="decode.loop",
+                             detached=True, rw=["decode"],
+                             reads=self._decode_reads())
+
+    def _decode_reads(self) -> list:
+        # the module contract: decode READS every slot — prefills RW their
+        # slot, so the dependency system serializes a slot's prefill against
+        # decode iterations instead of racing on the shared self.cache
+        return ["params"] + [("slot", i) for i in range(self.n_slots)]
 
     def start(self):
-        self._loop_task = self.rt.spawn(self._decode_iter, name="decode.loop",
-                                        rw=["decode"], reads=["params"])
+        self.group.spawn(self._decode_iter, name="decode.loop",
+                         detached=True, rw=["decode"],
+                         reads=self._decode_reads())
         return self
 
-    def stop(self):
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> bool:
+        """Stop the decode loop. With drain=True, block until every engine
+        task (in-flight prefills + the final decode iteration) fully
+        finished, re-raising the first task error if any occurred."""
         self._stop = True
+        if drain:
+            return self.group.wait(timeout=timeout)
+        return True
 
     def wait(self, req: Request, timeout: float = 120.0) -> bool:
         return req.done_event.wait(timeout)

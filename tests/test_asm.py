@@ -11,7 +11,11 @@ import threading
 import time
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+try:  # property tests need hypothesis; unit tests below run without it
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on minimal checkouts
+    HealthCheck = given = settings = st = None
 
 from repro.core import (READ, REDUCTION, WRITE, TaskRuntime, max_deliveries)
 from repro.core.asm import N_FLAGS
@@ -137,42 +141,47 @@ def test_nesting_blocks_successor():
     assert len(seen) == 4
 
 
-@st.composite
-def graph_strategy(draw):
-    n_tasks = draw(st.integers(2, 14))
-    addrs = ["A", "B", "C"]
-    specs = []
-    for _ in range(n_tasks):
-        spec = {"reads": [], "writes": [], "reductions": []}
-        for a in addrs:
-            kind = draw(st.sampled_from(["none", "none", "read", "write",
-                                         "red+"]))
-            if kind == "read":
-                spec["reads"].append(a)
-            elif kind == "write":
-                spec["writes"].append(a)
-            elif kind == "red+":
-                spec["reductions"].append((a, "+"))
-        specs.append(spec)
-    return specs
+if st is None:
+    def test_property_random_graphs():
+        pytest.importorskip("hypothesis")
 
+    def test_property_schedulers():
+        pytest.importorskip("hypothesis")
+else:
+    @st.composite
+    def graph_strategy(draw):
+        n_tasks = draw(st.integers(2, 14))
+        addrs = ["A", "B", "C"]
+        specs = []
+        for _ in range(n_tasks):
+            spec = {"reads": [], "writes": [], "reductions": []}
+            for a in addrs:
+                kind = draw(st.sampled_from(["none", "none", "read", "write",
+                                             "red+"]))
+                if kind == "read":
+                    spec["reads"].append(a)
+                elif kind == "write":
+                    spec["writes"].append(a)
+                elif kind == "red+":
+                    spec["reductions"].append((a, "+"))
+            specs.append(spec)
+        return specs
 
-@settings(max_examples=20, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow,
-                                 HealthCheck.data_too_large])
-@given(graph_strategy(), st.sampled_from(["waitfree", "locked"]))
-def test_property_random_graphs(specs, deps):
-    events, tasks = run_graph(specs, deps=deps)
-    check_ordering(specs, events)
-    if deps == "waitfree":
-        for t in tasks:
-            assert max_deliveries(t) <= N_FLAGS
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(graph_strategy(), st.sampled_from(["waitfree", "locked"]))
+    def test_property_random_graphs(specs, deps):
+        events, tasks = run_graph(specs, deps=deps)
+        check_ordering(specs, events)
+        if deps == "waitfree":
+            for t in tasks:
+                assert max_deliveries(t) <= N_FLAGS
 
-
-@settings(max_examples=10, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(graph_strategy(),
-       st.sampled_from(["delegation", "global-lock", "work-stealing"]))
-def test_property_schedulers(specs, scheduler):
-    events, _ = run_graph(specs, scheduler=scheduler)
-    check_ordering(specs, events)
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(graph_strategy(),
+           st.sampled_from(["delegation", "global-lock", "work-stealing"]))
+    def test_property_schedulers(specs, scheduler):
+        events, _ = run_graph(specs, scheduler=scheduler)
+        check_ordering(specs, events)

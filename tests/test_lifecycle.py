@@ -1,0 +1,210 @@
+"""Task lifecycle regression tests (generation-safe pooling, unified
+completion tokens, TaskGroup, parked workers, SPSC-full producer progress).
+
+These pin the bugs fixed by the lifecycle overhaul: runtime reuse after a
+failed task (stale errors), taskwait on a pooled non-retained task
+(use-after-recycle), producer livelock on a full SPSC insertion buffer, and
+fine-granularity stress across every scheduler x dependency-system cell.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import StaleTaskError, TaskRuntime
+
+SCHEDULERS = ["delegation", "global-lock", "work-stealing"]
+DEPS = ["waitfree", "locked"]
+
+
+# ------------------------------------------------------------ error hygiene
+def test_runtime_reuse_after_failed_task():
+    rt = TaskRuntime(n_workers=2).start()
+    rt.spawn(lambda: 1 / 0)
+    assert rt.barrier(timeout=30)
+    with pytest.raises(ZeroDivisionError):
+        rt.shutdown()
+    # the error list was cleared on raise: the runtime is reusable and a
+    # clean second run must not re-raise the stale error
+    rt.start()
+    done = []
+    rt.spawn(lambda: done.append(1))
+    assert rt.barrier(timeout=30)
+    rt.shutdown()
+    assert done == [1]
+
+
+def test_sibling_errors_ride_along():
+    rt = TaskRuntime(n_workers=2).start()
+    for _ in range(3):
+        rt.spawn(lambda: 1 / 0)
+    assert rt.barrier(timeout=30)
+    with pytest.raises(ZeroDivisionError) as ei:
+        rt.shutdown()
+    assert len(ei.value.errors) == 3
+
+
+# ------------------------------------------------------ generation safety
+def test_taskwait_on_recycled_pooled_task_via_handle():
+    rt = TaskRuntime(n_workers=2).start()
+    ref = rt.spawn(lambda: 41, handle=True)
+    assert rt.barrier(timeout=30)
+    # churn the pool so the Task object is recycled into new logical tasks
+    for _ in range(300):
+        rt.spawn(lambda: None)
+    assert rt.barrier(timeout=30)
+    t0 = time.monotonic()
+    assert rt.taskwait(ref, timeout=10)  # must not wait on the new occupant
+    assert time.monotonic() - t0 < 1.0
+    assert ref.done
+    if ref.stale:  # ref.pooled stamped at spawn: recycled => must raise
+        with pytest.raises(StaleTaskError):
+            ref.result()
+    rt.shutdown()
+
+
+def test_taskwait_plain_task_returns():
+    rt = TaskRuntime(n_workers=3).start()
+    for _ in range(50):
+        t = rt.spawn(lambda: time.sleep(0.001))
+        assert rt.taskwait(t, timeout=30)
+    rt.shutdown()
+
+
+def test_retained_task_readable_after_completion():
+    rt = TaskRuntime(n_workers=2).start()
+    t = rt.spawn(lambda: 7, retain=True)
+    assert rt.taskwait(t, timeout=30)
+    assert t.result == 7
+    ref = t.ref()
+    assert ref.done
+    assert ref.result() == 7  # retained tasks are never recycled
+    rt.shutdown()
+
+
+def test_generation_monotonic_across_reuse():
+    rt = TaskRuntime(n_workers=2).start()
+    refs = [rt.spawn(lambda: None, handle=True) for _ in range(100)]
+    assert rt.barrier(timeout=30)
+    for _ in range(100):
+        rt.spawn(lambda: None)
+    assert rt.barrier(timeout=30)
+    assert all(r.done for r in refs)
+    rt.shutdown()
+
+
+# ------------------------------------------------------------- task groups
+def test_taskgroup_waits_for_nested_subtree():
+    rt = TaskRuntime(n_workers=4).start()
+    g = rt.task_group("subtree")
+    done = []
+
+    def parent():
+        for j in range(5):
+            rt.spawn(lambda j=j: (time.sleep(0.005), done.append(j)))
+
+    g.spawn(parent)
+    assert g.wait(timeout=30)
+    assert len(done) == 5, "group.wait returned before the subtree finished"
+    rt.shutdown()
+
+
+def test_taskgroup_collects_and_clears_errors():
+    rt = TaskRuntime(n_workers=2).start()
+    g = rt.task_group()
+    g.spawn(lambda: 1 / 0)
+    g.spawn(lambda: None)
+    with pytest.raises(ZeroDivisionError):
+        g.wait(timeout=30)
+    # cleared on raise: the group is reusable
+    g.spawn(lambda: None)
+    assert g.wait(timeout=30)
+    with pytest.raises(ZeroDivisionError):
+        rt.shutdown()  # the runtime keeps its own record
+
+
+def test_taskgroup_many_waves_without_retention():
+    rt = TaskRuntime(n_workers=3).start()
+    g = rt.task_group()
+    total = [0]
+    lock = threading.Lock()
+
+    def inc():
+        with lock:
+            total[0] += 1
+
+    for _wave in range(5):
+        for _ in range(200):
+            g.spawn(inc)
+        assert g.wait(timeout=60)
+    rt.shutdown()
+    assert total[0] == 1000
+
+
+# ------------------------------------------------- SPSC-full producer path
+def test_spsc_full_producer_progress_runtime():
+    """A producer must make progress when its insertion buffer is full even
+    while workers hold the DTLock (bounded backoff + direct-serve)."""
+    rt = TaskRuntime(n_workers=2, scheduler="delegation",
+                     spsc_capacity=2).start()
+    done = []
+    lock = threading.Lock()
+
+    def hit():
+        with lock:
+            done.append(1)
+
+    for _ in range(3000):
+        rt.spawn(hit)
+    assert rt.barrier(timeout=120)
+    rt.shutdown()
+    assert len(done) == 3000
+
+
+def test_syncscheduler_direct_serve_fallback():
+    from repro.core.scheduler import SyncScheduler
+    s = SyncScheduler(2, spsc_capacity=1, max_add_spins=2)
+    got = []
+    produced = threading.Event()
+
+    def consumer():
+        while not (produced.is_set() and s.pending() == 0):
+            item = s.get_ready_task(0)
+            if item is not None:
+                got.append(item)
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    for i in range(2000):
+        s.add_ready_task(i)
+    produced.set()
+    th.join(timeout=60)
+    assert not th.is_alive()
+    assert sorted(got) == list(range(2000))
+
+
+# ------------------------------------------------------------------ stress
+@pytest.mark.parametrize("deps", DEPS)
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_stress_fine_grained_10k(scheduler, deps):
+    """>=10k fine-grained tasks per (scheduler x deps) cell, with RW chains
+    and reductions so both dependency systems do real lineage work."""
+    rt = TaskRuntime(n_workers=4, scheduler=scheduler, deps=deps).start()
+    N = 10_000
+    counter = [0]
+    lock = threading.Lock()
+
+    def inc():
+        with lock:
+            counter[0] += 1
+
+    for i in range(N):
+        if i % 31 == 0:
+            rt.spawn(inc, reductions=[("acc", "+")])
+        elif i % 7 == 0:
+            rt.spawn(inc, rw=[("chain", i % 16)])
+        else:
+            rt.spawn(inc)
+    assert rt.barrier(timeout=300), f"{scheduler}/{deps} did not quiesce"
+    rt.shutdown()
+    assert counter[0] == N

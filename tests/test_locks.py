@@ -2,7 +2,11 @@
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on minimal checkouts
+    given = settings = st = None
 
 from repro.core import DTLock, MutexLock, PTLock, TicketLock
 
@@ -111,21 +115,25 @@ def test_dtlock_delegation_protocol():
             assert item == f"task-{wid}"
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 4), st.integers(1, 100))
-def test_property_counter_increments(n_threads, n_iters):
-    lk = DTLock(64)
-    box = {"v": 0}
+if st is None:
+    def test_property_counter_increments():
+        pytest.importorskip("hypothesis")
+else:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 100))
+    def test_property_counter_increments(n_threads, n_iters):
+        lk = DTLock(64)
+        box = {"v": 0}
 
-    def w():
-        for _ in range(n_iters):
-            lk.lock()
-            box["v"] += 1
-            lk.unlock()
+        def w():
+            for _ in range(n_iters):
+                lk.lock()
+                box["v"] += 1
+                lk.unlock()
 
-    ts = [threading.Thread(target=w) for _ in range(n_threads)]
-    for t in ts:
-        t.start()
-    for t in ts:
-        t.join()
-    assert box["v"] == n_threads * n_iters
+        ts = [threading.Thread(target=w) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert box["v"] == n_threads * n_iters

@@ -1,7 +1,12 @@
 """SPSC queue: order preservation, boundedness, concurrent producer/consumer."""
 import threading
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on minimal checkouts
+    given = settings = st = None
 
 from repro.core import SPSCQueue
 
@@ -47,25 +52,29 @@ def test_concurrent_producer_consumer():
     assert out == list(range(N))
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.sampled_from(["push", "pop"]), max_size=200))
-def test_property_queue_model(ops):
-    """SPSC behaves like a bounded FIFO (single-threaded model check)."""
-    from collections import deque
-    q = SPSCQueue(8)
-    model = deque()
-    n = 0
-    for op in ops:
-        if op == "push":
-            ok = q.push(n)
-            if len(model) < 8:
-                assert ok
-                model.append(n)
+if st is None:
+    def test_property_queue_model():
+        pytest.importorskip("hypothesis")
+else:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.sampled_from(["push", "pop"]), max_size=200))
+    def test_property_queue_model(ops):
+        """SPSC behaves like a bounded FIFO (single-threaded model check)."""
+        from collections import deque
+        q = SPSCQueue(8)
+        model = deque()
+        n = 0
+        for op in ops:
+            if op == "push":
+                ok = q.push(n)
+                if len(model) < 8:
+                    assert ok
+                    model.append(n)
+                else:
+                    assert not ok
+                n += 1
             else:
-                assert not ok
-            n += 1
-        else:
-            got = q.pop()
-            want = model.popleft() if model else None
-            assert got == want
-    assert len(q) == len(model)
+                got = q.pop()
+                want = model.popleft() if model else None
+                assert got == want
+        assert len(q) == len(model)
