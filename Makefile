@@ -2,13 +2,17 @@
 # ROADMAP.md; no install step is needed.
 PY ?= python
 
-.PHONY: verify bench-smoke bench ci
+.PHONY: verify bench-smoke bench-wake bench ci
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 bench-smoke:
-	PYTHONPATH=src $(PY) benchmarks/taskbench.py --smoke
+	PYTHONPATH=src $(PY) benchmarks/taskbench.py --smoke --json taskbench-smoke.json
+	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --repeats 3 --json taskbench-wake.json
+
+bench-wake:
+	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --json taskbench-wake.json
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py

@@ -2,10 +2,12 @@
 # delegation-based scheduler (DTLock + SPSC), pooled allocation, tracing.
 from repro.core.asm import (COMMUTATIVE, READ, READWRITE, REDUCTION, WRITE,
                             DataAccess, DataAccessMessage, MailBox,
-                            WaitFreeDependencySystem, max_deliveries)
+                            MailBoxPool, WaitFreeDependencySystem,
+                            max_deliveries)
 from repro.core.deps_locked import LockedDependencySystem
 from repro.core.instrument import Tracer
 from repro.core.locks import DTLock, MutexLock, PTLock, TicketLock
+from repro.core.parking import EventcountParking, ParkingLot
 from repro.core.pool import TaskPool
 from repro.core.runtime import TaskGroup, TaskRuntime, current_task
 from repro.core.scheduler import (GlobalLockScheduler, SyncScheduler,
@@ -15,9 +17,10 @@ from repro.core.task import StaleTaskError, Task, TaskRef
 
 __all__ = [
     "COMMUTATIVE", "READ", "READWRITE", "REDUCTION", "WRITE",
-    "DataAccess", "DataAccessMessage", "MailBox", "WaitFreeDependencySystem",
-    "LockedDependencySystem", "Tracer", "DTLock", "MutexLock", "PTLock",
-    "TicketLock", "TaskPool", "TaskGroup", "TaskRuntime", "current_task",
+    "DataAccess", "DataAccessMessage", "MailBox", "MailBoxPool",
+    "WaitFreeDependencySystem", "LockedDependencySystem", "Tracer", "DTLock",
+    "MutexLock", "PTLock", "TicketLock", "ParkingLot", "EventcountParking",
+    "TaskPool", "TaskGroup", "TaskRuntime", "current_task",
     "GlobalLockScheduler", "SyncScheduler", "UnsyncScheduler",
     "WorkStealingScheduler", "SPSCQueue", "StaleTaskError", "Task",
     "TaskRef", "max_deliveries",

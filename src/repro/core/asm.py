@@ -36,6 +36,7 @@ Transition rules (fire exactly once, on the delivery that completes the set):
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Callable, List, Optional
 
@@ -110,22 +111,52 @@ class DataAccessMessage:
 
 class MailBox:
     """Per-thread message queue (paper Fig. 2). deliver_all drains until
-    quiescent; each delivery is one fetch_or + rule evaluation."""
+    quiescent; each delivery is one fetch_or + rule evaluation.
 
-    __slots__ = ("_q", "on_ready")
+    Delivered DataAccessMessage objects are recycled through a small
+    freelist (``send`` draws from it, ``deliver_all`` returns to it): at
+    fine granularity every access generates several messages, and with
+    MailBoxes themselves pooled per worker (see MailBoxPool) the message
+    objects are amortized across all tasks of a lineage instead of being
+    allocated per delivery."""
+
+    __slots__ = ("_q", "on_ready", "_free")
+
+    _MAX_FREE = 64  # deeper backlogs fall back to the allocator
 
     def __init__(self, on_ready: Callable):
         self._q: deque = deque()
         self.on_ready = on_ready  # callback(access) when access satisfied
+        self._free: list = []
 
     def post(self, msg: DataAccessMessage):
         self._q.append(msg)
 
+    def send(self, to: DataAccess, flags_for_next: int,
+             from_: Optional[DataAccess] = None,
+             flags_after_propagation: int = 0):
+        """post() without allocating: reuse a recycled message object."""
+        free = self._free
+        if free:
+            m = free.pop()
+            m.to = to
+            m.flags_for_next = flags_for_next
+            m.from_ = from_
+            m.flags_after_propagation = flags_after_propagation
+        else:
+            m = DataAccessMessage(to, flags_for_next, from_,
+                                  flags_after_propagation)
+        self._q.append(m)
+
     def deliver_all(self):
         q = self._q
+        free = self._free
         while q:
             msg = q.popleft()
             self._deliver(msg)
+            if len(free) < self._MAX_FREE:
+                msg.to = msg.from_ = None  # no access refs from the freelist
+                free.append(msg)
 
     # ------------------------------------------------------------------
     def _deliver(self, msg: DataAccessMessage):
@@ -156,7 +187,7 @@ class MailBox:
         # R_read: plain reads forward read permission down the chain early
         # (reductions do NOT: their privatized writes exclude plain readers)
         if a.atype == READ and crossed(READ_SAT | SUCC_LINKED):
-            self.post(DataAccessMessage(a.successor, READ_SAT, a, 0))
+            self.send(a.successor, READ_SAT, a, 0)
 
         # R_red: same-op reduction chain forwards reduction readiness
         if a.atype == REDUCTION and (new & SUCC_IS_RED):
@@ -165,7 +196,7 @@ class MailBox:
                     others = [b | SUCC_LINKED | SUCC_IS_RED
                               for b in a.ready_bits_options() if b != rb]
                     if not any((old & b) == b for b in others):
-                        self.post(DataAccessMessage(a.successor, RED_SAT, a, 0))
+                        self.send(a.successor, RED_SAT, a, 0)
                     break
 
         # R_full: completion forwards full satisfiability to the successor
@@ -173,19 +204,63 @@ class MailBox:
             # plain READ already forwarded READ_SAT via R_read (its
             # precondition is implied here), so only WRITE_SAT remains
             fwd = WRITE_SAT if a.atype == READ else (READ_SAT | WRITE_SAT)
-            self.post(DataAccessMessage(a.successor, fwd, a, ACK_SUCC))
+            self.send(a.successor, fwd, a, ACK_SUCC)
 
         # R_child: child domain inherits what the parent access holds
         if crossed(CHILD_LINKED | READ_SAT):
-            self.post(DataAccessMessage(a.child, READ_SAT, a, 0))
+            self.send(a.child, READ_SAT, a, 0)
         if crossed(CHILD_LINKED | READ_SAT | WRITE_SAT):
-            self.post(DataAccessMessage(a.child, WRITE_SAT, a, ACK_CHILD))
+            self.send(a.child, WRITE_SAT, a, ACK_CHILD)
 
         # R_parent: tail access completion notifies the waiting parent
         if crossed(_FULL | PARENT_WAIT):
             p = a.parent_access
             if p is not None and p.children_pending.fetch_add(-1) == 1:
-                self.post(DataAccessMessage(p, CHILD_DONE, a, ACK_PARENT))
+                self.send(p, CHILD_DONE, a, ACK_PARENT)
+
+
+class MailBoxPool:
+    """Recycle MailBox objects across threads.
+
+    A MailBox is quiescent (queue drained) between register/unregister
+    calls, so a box leased by a short-lived producer thread can be handed,
+    with its warmed message freelist, to the next thread that needs one —
+    instead of each transient thread rebuilding a MailBox plus its messages
+    from scratch. The runtime leases one box per thread and returns it when
+    the thread's locals are collected (see TaskRuntime._mailbox)."""
+
+    def __init__(self, on_ready: Callable, max_free: int = 64):
+        self._on_ready = on_ready
+        self._free: list[MailBox] = []
+        self._lock = threading.Lock()
+        self._max_free = max_free
+        self.allocs = 0
+        self.reuses = 0
+
+    def acquire(self) -> MailBox:
+        with self._lock:
+            mb = self._free.pop() if self._free else None
+            if mb is None:
+                self.allocs += 1
+            else:
+                self.reuses += 1
+        if mb is None:
+            return MailBox(self._on_ready)
+        mb.on_ready = self._on_ready
+        return mb
+
+    def release(self, mb: MailBox):
+        if mb._q:  # a non-quiescent box must never be re-leased
+            return
+        with self._lock:
+            if len(self._free) < self._max_free:
+                self._free.append(mb)
+
+    @property
+    def stats(self) -> dict:
+        with self._lock:
+            return {"allocs": self.allocs, "reuses": self.reuses,
+                    "free": len(self._free)}
 
 
 def domain_key(domain, address) -> tuple:
@@ -248,18 +323,17 @@ class WaitFreeDependencySystem:
                 if (acc.atype == REDUCTION and prev.atype == REDUCTION
                         and acc.red_op == prev.red_op):
                     bits |= SUCC_IS_RED
-                mailbox.post(DataAccessMessage(prev, bits, acc, 0))
+                mailbox.send(prev, bits, acc, 0)
             elif parent is not None and parent.access_for(acc.address) is not None:
                 # head of a child-domain lineage: hang off the parent access
                 pacc = parent.access_for(acc.address)
                 acc.parent_access = pacc
                 pacc.child = acc
                 pacc.children_pending.fetch_add(1)
-                mailbox.post(DataAccessMessage(pacc, CHILD_LINKED, acc, 0))
+                mailbox.send(pacc, CHILD_LINKED, acc, 0)
             else:
                 # fresh root lineage: immediately fully satisfied
-                mailbox.post(DataAccessMessage(acc, READ_SAT | WRITE_SAT,
-                                               None, 0))
+                mailbox.send(acc, READ_SAT | WRITE_SAT, None, 0)
             if acc.parent_access is None and parent is not None:
                 # non-head child accesses still notify through the chain; the
                 # tail's parent_access is set at parent unregister time.
@@ -274,7 +348,7 @@ class WaitFreeDependencySystem:
                 # no children were ever created (task body has finished, so
                 # none can appear): complete the child side too
                 flags |= CHILD_DONE
-            mailbox.post(DataAccessMessage(acc, flags, None, 0))
+            mailbox.send(acc, flags, None, 0)
         # close child-domain lineages: tell each tail to notify this task's
         # access when it completes
         for acc in task.accesses:
@@ -283,7 +357,7 @@ class WaitFreeDependencySystem:
                 tail = ref.load()
                 if tail is not None:
                     tail.parent_access = acc
-                    mailbox.post(DataAccessMessage(tail, PARENT_WAIT, acc, 0))
+                    mailbox.send(tail, PARENT_WAIT, acc, 0)
         mailbox.deliver_all()
         # prune this task's child-domain lineages: the body has finished, so
         # no further registrations in this domain can occur. Messages hold

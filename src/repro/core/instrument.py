@@ -41,6 +41,10 @@ EVENTS = {
     "data.prefetch": 16,
     "step.begin": 17,
     "step.end": 18,
+    "worker.wake": 19,      # single-wake delivered to a parked worker
+    "task.cancel": 20,      # group-cancelled task dropped (spawn or dequeue)
+    "group.cancel": 21,     # TaskGroup.cancel() (arg: outstanding count)
+    "sched.add_fallback": 22,  # producer blocked as DTLock ticket waiter
 }
 
 

@@ -1,0 +1,243 @@
+"""Worker parking: per-worker futex-style slots + the PR-1 eventcount.
+
+The paper's delegation scheduler (§3.4) keeps idle threads *inside* the
+DTLock where the owner serves tasks to them — idleness must not serialize on
+one global condition. The first parking design (PR 1) did exactly that: every
+parked worker waited on a single eventcount, so every producer wake and every
+timed re-poll contended on one lock, the serialization-on-idle anti-pattern.
+
+``ParkingLot`` replaces it with one slot per worker:
+
+state machine (per slot)::
+
+    RUNNING --begin_poll--> POLLING --park--> PARKED
+       ^                       |                 |
+       |---- cancel_poll ------+                 |
+       +------------- wake / timeout ------------+
+
+* ``begin_poll`` publishes POLLING and returns the slot's wake epoch
+  (``seq``). The worker then re-polls the scheduler: any task enqueued
+  before the publish is observed by that re-poll, any producer that
+  enqueues after it observes POLLING and bumps ``seq`` — the classic
+  futex protocol, so a wakeup can never be lost.
+* ``park`` blocks on the slot's own condition only if the epoch is
+  unchanged; it is bounded by the caller's (adaptive) timeout.
+* ``wake_one`` wakes exactly one idle worker — PARKED slots without a
+  pending (not-yet-consumed) wake first, preferring the producer's NUMA
+  node, then any PARKED, then POLLING (epoch bump only) — scanning from a
+  round-robin start so burst producers fan out across distinct workers.
+
+``EventcountParking`` preserves the PR-1 single-condition design behind the
+same interface; it remains available as ``TaskRuntime(parking="eventcount")``
+for the wake-latency ablation (benchmarks/taskbench.py --wake-latency).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.core.atomic import AtomicU64
+
+RUNNING, POLLING, PARKED = range(3)
+
+
+class ParkingSlot:
+    """One worker's parking place: own condition + wake epoch."""
+
+    __slots__ = ("wid", "numa", "cond", "seq", "state", "pending_wake")
+
+    def __init__(self, wid: int, numa: int = 0):
+        self.wid = wid
+        self.numa = numa
+        self.cond = threading.Condition(threading.Lock())
+        self.seq = 0          # wake epoch: bumped by every wake
+        self.state = RUNNING  # plain int store: GIL-sequenced vs readers
+        self.pending_wake = False  # a wake was posted but not yet consumed
+
+
+class ParkingLot:
+    """Per-worker parking slots with single-wake producers."""
+
+    name = "slots"
+
+    def __init__(self, n_workers: int, n_numa: int = 1):
+        n_numa = max(1, n_numa)
+        self.slots = [ParkingSlot(w, w % n_numa) for w in range(n_workers)]
+        self._rr = AtomicU64(0)
+        self._n_idle = AtomicU64(0)  # POLLING + PARKED (producer fast path)
+        self.parks = AtomicU64(0)    # total park() calls (idle-churn stat)
+        self.wakes = AtomicU64(0)    # total wakes posted
+
+    # -- worker side ---------------------------------------------------
+    def begin_poll(self, wid: int) -> int:
+        """Publish POLLING; returns the wake epoch to hand to ``park``.
+        The caller MUST re-poll the scheduler after this returns."""
+        s = self.slots[wid]
+        with s.cond:
+            s.state = POLLING
+            token = s.seq
+        self._n_idle.fetch_add(1)
+        return token
+
+    def cancel_poll(self, wid: int) -> None:
+        """The post-publish re-poll found work: back to RUNNING."""
+        s = self.slots[wid]
+        with s.cond:
+            s.state = RUNNING
+            s.pending_wake = False  # consumed: the re-poll found the work
+        self._n_idle.fetch_add(-1)
+
+    def park(self, wid: int, token: int, timeout: float) -> bool:
+        """Block until woken or timeout. Returns True iff woken (the slot's
+        epoch moved past ``token``)."""
+        s = self.slots[wid]
+        self.parks.fetch_add(1)
+        with s.cond:
+            if s.seq == token:
+                s.state = PARKED
+                s.cond.wait(timeout)
+            woken = s.seq != token
+            s.state = RUNNING
+            s.pending_wake = False
+        self._n_idle.fetch_add(-1)
+        return woken
+
+    # -- producer side -------------------------------------------------
+    def wake_one(self, prefer_numa: Optional[int] = None,
+                 prefer_wid: Optional[int] = None) -> bool:
+        """Wake exactly one idle worker. Candidate order: the explicitly
+        preferred worker, PARKED slots with no pending wake on the
+        preferred NUMA node, any un-pending PARKED, POLLING (epoch bump
+        only), then pending PARKED. The scan reads slot states racily, so a
+        candidate that slipped back to RUNNING before its lock is skipped
+        and the NEXT candidate is tried — a single posted wake must not be
+        silently dropped while other workers stay parked."""
+        if self._n_idle.load() == 0:
+            return False
+        slots = self.slots
+        n = len(slots)
+        if prefer_wid is not None:
+            s = slots[prefer_wid % n]
+            if s.state != RUNNING and not s.pending_wake \
+                    and self._post_wake(s):
+                return True
+        start = self._rr.fetch_add(1) % n
+        # top-tier candidates (un-pending PARKED on the right node) are
+        # woken inline — the common case ends without building any list;
+        # lower tiers are collected lazily for the retry fallback
+        parked = polling = pending = None
+        for k in range(n):
+            s = slots[(start + k) % n]
+            st = s.state
+            if st == PARKED:
+                if not s.pending_wake:
+                    if prefer_numa is None or s.numa == prefer_numa:
+                        if self._post_wake(s):
+                            return True
+                        continue  # raced/collapsed: try the next candidate
+                    if parked is None:
+                        parked = s
+                elif pending is None:
+                    pending = s
+            elif st == POLLING and polling is None and not s.pending_wake:
+                polling = s
+        for s in (parked, polling):
+            if s is not None and self._post_wake(s):
+                return True
+        # last resort: a slot with an unconsumed wake — double-posting just
+        # re-bumps its epoch, and its own wake-chaining covers the backlog
+        return pending is not None and self._post_wake(pending,
+                                                       allow_pending=True)
+
+    def _post_wake(self, s: ParkingSlot, allow_pending: bool = False) -> bool:
+        with s.cond:
+            if s.state == RUNNING:
+                return False  # raced back to work; nothing to wake
+            if s.pending_wake and not allow_pending:
+                return False  # another producer got here first: two
+                # concurrent wakes must reach two workers, not collapse
+            s.seq += 1
+            s.pending_wake = True
+            s.cond.notify()
+        self.wakes.fetch_add(1)
+        return True
+
+    def wake_all(self) -> None:
+        for s in self.slots:
+            with s.cond:
+                s.seq += 1
+                s.cond.notify()
+
+    # -- stats ---------------------------------------------------------
+    @property
+    def n_idle(self) -> int:
+        return self._n_idle.load()
+
+    @property
+    def n_parked(self) -> int:
+        return sum(1 for s in self.slots if s.state == PARKED)
+
+
+class EventcountParking:
+    """PR-1 behavior: one global (sequence, condition) pair for all workers.
+
+    Kept as the −slots ablation: every wake and every timed re-poll funnels
+    through a single lock, which is precisely the contention the per-worker
+    design removes at high worker counts.
+    """
+
+    name = "eventcount"
+
+    def __init__(self, n_workers: int, n_numa: int = 1):
+        self._cond = threading.Condition(threading.Lock())
+        self._seq = 0
+        self._n_idle = 0  # mutated only under _cond
+        self.parks = AtomicU64(0)
+        self.wakes = AtomicU64(0)
+
+    def begin_poll(self, wid: int) -> int:
+        with self._cond:
+            self._n_idle += 1
+            return self._seq
+
+    def cancel_poll(self, wid: int) -> None:
+        with self._cond:
+            self._n_idle -= 1
+
+    def park(self, wid: int, token: int, timeout: float) -> bool:
+        self.parks.fetch_add(1)
+        with self._cond:
+            if self._seq == token:
+                self._cond.wait(timeout)
+            woken = self._seq != token
+            self._n_idle -= 1
+        return woken
+
+    def wake_one(self, prefer_numa: Optional[int] = None,
+                 prefer_wid: Optional[int] = None) -> bool:
+        if self._n_idle:  # racy read: bounded by the park timeout
+            with self._cond:
+                self._seq += 1
+                self._cond.notify()
+            self.wakes.fetch_add(1)
+            return True
+        return False
+
+    def wake_all(self) -> None:
+        with self._cond:
+            self._seq += 1
+            self._cond.notify_all()
+
+    @property
+    def n_idle(self) -> int:
+        return self._n_idle
+
+    @property
+    def n_parked(self) -> int:
+        return self._n_idle
+
+
+PARKING_KINDS = {
+    "slots": ParkingLot,
+    "eventcount": EventcountParking,
+}

@@ -11,6 +11,7 @@ import threading
 from typing import Callable, Optional
 
 from repro.core.asm import DataAccess
+from repro.core.atomic import AtomicU64
 from repro.core.task import Task
 
 
@@ -68,23 +69,41 @@ class ObjectPool:
 
 class TaskPool:
     """Pools Task objects (DataAccess objects are lightweight enough that we
-    pool only tasks; accesses are owned by their task's lifetime)."""
+    pool only tasks; accesses are owned by their task's lifetime).
+
+    ``outstanding`` counts pooled acquisitions that have not been released
+    back — the leak detector the cancellation tests assert on (a dropped
+    task that skipped its completion path would pin this above zero)."""
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self._pool = ObjectPool(Task, reset=lambda t: t.reset())
+        self._outstanding = AtomicU64(0)
 
     def acquire(self) -> Task:
         if not self.enabled:
             return Task()
         t = self._pool.acquire()
         t.pooled = True
+        self._outstanding.fetch_add(1)
         return t
 
     def release(self, task: Task):
-        if self.enabled and task.pooled:
+        """Called once per task at finalize. Retained (pooled=False) tasks
+        are NOT recycled, but they did come from acquire(), so the
+        outstanding count drops either way — otherwise every retain=True
+        spawn would read as a permanent leak."""
+        if not self.enabled:
+            return
+        self._outstanding.fetch_add(-1)
+        if task.pooled:
             self._pool.release(task)
 
     @property
+    def outstanding(self) -> int:
+        return self._outstanding.load()
+
+    @property
     def stats(self):
-        return {"allocs": self._pool.allocs, "reuses": self._pool.reuses}
+        return {"allocs": self._pool.allocs, "reuses": self._pool.reuses,
+                "outstanding": self._outstanding.load()}

@@ -57,22 +57,49 @@ by ``shutdown()`` / ``TaskGroup.wait()``. The error list is cleared on
 raise, so a runtime (or group) is reusable after a failure; sibling errors
 ride along on the raised exception's ``errors`` attribute.
 
-Idle workers park on a condition variable (no sleep-spinning): a worker that
-polls an empty scheduler a few times publishes itself as parked and blocks;
-``add_ready_task`` wakes parked workers through an eventcount (sequence
-number + notify), with a short timed fallback so a lost wakeup costs a
-bounded delay rather than a hang.
+Worker parking (per-worker slots; see repro.core.parking)
+---------------------------------------------------------
+Each worker owns a parking slot with the state machine RUNNING -> POLLING
+-> PARKED. A worker that polls an empty scheduler a few times publishes
+POLLING (``begin_poll``), re-polls once — the futex protocol that makes
+lost wakeups impossible — and then blocks on its *own* condition.
+``add_ready_task`` (via a wake hook every scheduler calls after the task is
+visible) wakes exactly ONE parked worker, preferring the task's NUMA node
+and scanning from a round-robin start; a worker that dequeues work while
+others are parked and the scheduler still has pending tasks chains one more
+wake. The park timeout adapts to an EWMA of observed task inter-arrival —
+bursty fine-grained phases re-poll within ~1 ms while idle phases back off
+exponentially to a long sleep — so even a pathological missed wake costs a
+bounded, load-proportional delay. ``TaskRuntime(parking="eventcount")``
+selects the previous single-condition design (kept for the wake-latency
+ablation).
+
+Cancellation (TaskGroup.cancel)
+-------------------------------
+``group.cancel()`` is cooperative and epoch-based: every task spawned into
+a group is stamped with the group's cancel epoch; ``cancel()`` bumps the
+epoch, so (1) new spawns into the group are refused (``spawn`` returns
+``None``), and (2) still-queued member tasks are *dropped at dequeue* — the
+worker skips the body but runs the full completion path (dependency
+unregister, completion tokens, group accounting, pool release), so
+successors, ``taskwait`` and pooled-task recycling all behave exactly as if
+the body had run and returned None. Tasks already running are never
+interrupted. A group created with ``cancel_on_error=True`` cancels itself
+when the first member task fails — the serve engine uses this to stop its
+decode chain on the first error and for ``stop(drain=False)``.
 """
 from __future__ import annotations
 
 import threading
 import time
+import weakref
 from typing import Callable, Iterable, Optional, Union
 
-from repro.core.asm import MailBox, WaitFreeDependencySystem
+from repro.core.asm import MailBox, MailBoxPool, WaitFreeDependencySystem
 from repro.core.atomic import AtomicU64
 from repro.core.deps_locked import LockedDependencySystem
 from repro.core.instrument import Tracer
+from repro.core.parking import PARKING_KINDS
 from repro.core.pool import TaskPool
 from repro.core.scheduler import SCHEDULER_KINDS
 from repro.core.task import DONE, Task, TaskRef
@@ -82,7 +109,11 @@ _current_task = threading.local()
 # worker parking knobs: how many empty polls before parking, and the timed
 # backstop so a (theoretically possible) lost wakeup is a bounded delay
 _PARK_AFTER_SPINS = 20
-_PARK_TIMEOUT_S = 0.05
+_PARK_TIMEOUT_S = 0.05          # fixed timeout (eventcount mode, wait slices)
+_PARK_TIMEOUT_MIN_S = 0.001     # adaptive floor: burst-phase re-poll period
+_PARK_TIMEOUT_MAX_S = 0.25      # adaptive ceiling: idle-phase sleep
+_PARK_EWMA_ALPHA = 0.1          # inter-arrival EWMA smoothing
+_PARK_EWMA_MULT = 32.0          # timeout = MULT * EWMA(inter-arrival)
 
 
 def current_task() -> Optional[Task]:
@@ -95,11 +126,18 @@ class TaskGroup:
     Producer-side accounting is two atomic counters — no locks on the spawn
     or completion fast path; ``wait`` blocks on an event armed exactly when
     the outstanding count leaves / reaches zero.
+
+    ``cancel()`` stops admitting spawns and drops still-queued member tasks
+    at dequeue (see the module docstring's cancellation contract). With
+    ``cancel_on_error=True`` the group cancels itself when the first member
+    task fails.
     """
 
-    def __init__(self, runtime: "TaskRuntime", name: str = ""):
+    def __init__(self, runtime: "TaskRuntime", name: str = "",
+                 cancel_on_error: bool = False):
         self._rt = runtime
         self.name = name
+        self.cancel_on_error = cancel_on_error
         self._outstanding = AtomicU64(0)
         self._spawned = AtomicU64(0)
         self._idle = threading.Event()
@@ -109,9 +147,24 @@ class TaskGroup:
         self._event_lock = threading.Lock()
         self._errors: list[BaseException] = []
         self._errors_lock = threading.Lock()
+        # cancel token: tasks are stamped with the epoch at spawn; cancel()
+        # bumps it, so queued members are dropped at dequeue by epoch
+        # mismatch (generation-checked: a recycled pooled Task re-stamps)
+        self._cancel_epoch = AtomicU64(0)
+        self._cancel_once = AtomicU64(0)
+        self._cancelled = False
+        # invoked exactly once, after the epoch bump, whoever triggers the
+        # cancel (explicit cancel() or the first error under
+        # cancel_on_error) — e.g. the serve engine releases its request
+        # waiters here. A raising callback is recorded as a group error,
+        # never propagated into the cancelling worker's loop.
+        self.on_cancel: Optional[Callable[[], None]] = None
 
     # -- spawn-side ----------------------------------------------------
-    def spawn(self, fn: Callable, args: tuple = (), kwargs=None, **kw) -> Task:
+    def spawn(self, fn: Callable, args: tuple = (), kwargs=None,
+              **kw) -> Union[Task, TaskRef, None]:
+        """Spawn into this group; returns None once the group is cancelled
+        (admission refused) — see TaskRuntime.spawn for the other kinds."""
         return self._rt.spawn(fn, args, kwargs, group=self, **kw)
 
     def _attach(self, task: Task):
@@ -121,11 +174,38 @@ class TaskGroup:
                 if self._outstanding.load() > 0:
                     self._idle.clear()
 
+    # -- cancellation --------------------------------------------------
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self):
+        """Stop admitting spawns into this group and drop its still-queued
+        tasks at dequeue. Running tasks finish normally; ``wait`` then
+        returns once the survivors completed. Idempotent — concurrent
+        cancels collapse to one epoch bump and one on_cancel call."""
+        if self._cancelled:  # racy fast path; the CAS below decides
+            return
+        if not self._cancel_once.compare_exchange(0, 1):
+            return
+        self._cancelled = True
+        self._cancel_epoch.fetch_add(1)
+        self._rt.tracer.event("group.cancel", self._outstanding.load())
+        cb = self.on_cancel
+        if cb is not None:
+            try:
+                cb()
+            except BaseException as e:  # surfaced by wait(), not the worker
+                with self._errors_lock:
+                    self._errors.append(e)
+
     # -- completion-side (called by the runtime at full finish) --------
     def _task_done(self, task: Task):
         if task.exception is not None:
             with self._errors_lock:
                 self._errors.append(task.exception)
+            if self.cancel_on_error:
+                self.cancel()
         if self._outstanding.fetch_add(-1) == 1:
             with self._event_lock:  # re-check: a racing spawn re-armed
                 if self._outstanding.load() == 0:
@@ -195,12 +275,25 @@ def _attach_siblings(errs: list) -> BaseException:
     return primary
 
 
+class _MailboxLease:
+    """Thread-local holder for a pooled MailBox. The finalizer returns the
+    box to the pool when the owning thread's locals are collected — NOT a
+    __del__ on MailBox itself, because the pool's free list must be able to
+    hold strong references to recycled boxes."""
+
+    __slots__ = ("mb", "_fin", "__weakref__")
+
+    def __init__(self, pool):
+        self.mb = pool.acquire()
+        self._fin = weakref.finalize(self, pool.release, self.mb)
+
+
 class TaskRuntime:
     def __init__(self, n_workers: int = 4, *, scheduler: str = "delegation",
                  deps: str = "waitfree", use_pool: bool = True,
                  policy: str = "fifo", n_numa: int = 1,
                  tracer: Optional[Tracer] = None,
-                 spsc_capacity: int = 256):
+                 spsc_capacity: int = 256, parking: str = "slots"):
         self.n_workers = n_workers
         self.tracer = tracer or Tracer(enabled=False)
         self.pool = TaskPool(enabled=use_pool)
@@ -219,29 +312,47 @@ class TaskRuntime:
                       instrument=self.tracer)
         self.scheduler = sched_cls(n_workers, **kw)
         self.scheduler_kind = scheduler
+        # wake hook: every scheduler calls this once the task is visible to
+        # consumers, so the single-wake decision sits next to the enqueue
+        self.scheduler.on_enqueue = self._on_enqueue
 
         self._live = AtomicU64(0)  # created-but-not-fully-finished tasks
         self._quiescent = threading.Event()
         self._quiescent.set()
+        # serializes quiescent arm/disarm against the count it reflects:
+        # taken only on 0<->1 boundary transitions (same pattern as
+        # TaskGroup._event_lock) so a spawn racing the last finalize cannot
+        # leave the event set while a task is live
+        self._quiescent_lock = threading.Lock()
         self._stop = False
         self._threads: list[threading.Thread] = []
         self._started = False
         self._mailboxes = threading.local()
+        self._mb_pool = MailBoxPool(self._on_access_ready)
         self._errors: list[BaseException] = []
         self._errors_lock = threading.Lock()
-        # worker parking: eventcount (seq + cond); _n_parked is read racily
-        # on the producer fast path (bounded by the timed park fallback)
-        self._park_cond = threading.Condition(threading.Lock())
-        self._park_seq = 0
-        self._n_parked = 0
+        # worker parking: per-worker slots (default) or the PR-1 global
+        # eventcount ablation; see repro.core.parking
+        self.parking_kind = parking
+        self._n_numa = max(1, n_numa)
+        self._parking = PARKING_KINDS[parking](n_workers, n_numa=n_numa)
+        # adaptive park timeout: EWMA of task inter-arrival (advisory —
+        # plain, racy updates; every consumer clamps to [MIN, MAX])
+        self._ewma_arrival_s = 0.005
+        self._last_arrival_ns = 0
 
     # ---------------------------------------------------------------- infra
     def _mailbox(self) -> MailBox:
-        mb = getattr(self._mailboxes, "mb", None)
-        if mb is None:
-            mb = MailBox(self._on_access_ready)
-            self._mailboxes.mb = mb
-        return mb
+        """Thread-local MailBox, leased from a shared pool: worker threads
+        reuse one box across every task they run, and a box leased by a
+        transient producer thread returns to the pool when the thread dies
+        (weakref.finalize on the lease), carrying its recycled message
+        objects to the next lineage instead of being rebuilt per thread."""
+        lease = getattr(self._mailboxes, "lease", None)
+        if lease is None:
+            lease = _MailboxLease(self._mb_pool)
+            self._mailboxes.lease = lease
+        return lease.mb
 
     def _on_access_ready(self, access):
         access.task.access_satisfied(access)
@@ -262,7 +373,7 @@ class TaskRuntime:
         if wait:
             self.barrier()
         self._stop = True
-        self._wake_workers(all_workers=True)
+        self._parking.wake_all()
         for t in self._threads:
             t.join(timeout=5)
         self._threads.clear()
@@ -295,7 +406,16 @@ class TaskRuntime:
               commutative: Iterable = (), affinity: Optional[int] = None,
               parent: Optional[Task] = None, retain: bool = False,
               group: Optional[TaskGroup] = None, detached: bool = False,
-              handle: bool = False) -> Union[Task, TaskRef]:
+              handle: bool = False) -> Union[Task, TaskRef, None]:
+        # cancelled group: refuse admission. The epoch is read BEFORE the
+        # admission check so a cancel() racing this spawn either rejects it
+        # here or (epoch already bumped past the stamp) drops it at dequeue
+        # — after cancel() returns, no newly spawned member body can run.
+        if group is not None:
+            cancel_epoch = group._cancel_epoch.load()
+            if group._cancelled:
+                self.tracer.event("task.cancel", 0)
+                return None
         # detached=True spawns a root task even from inside a running task:
         # self-perpetuating loops (e.g. the serve decode chain) must NOT
         # parent each iteration on the previous one, or completion tokens
@@ -309,6 +429,8 @@ class TaskRuntime:
         if retain:
             task.pooled = False  # caller reads .result after completion
         task.group = group
+        if group is not None:
+            task._cancel_epoch = cancel_epoch
         task.on_ready = self._task_ready
         task.created_ns = time.monotonic_ns()
         # the ref must be stamped before the task is published to the
@@ -320,24 +442,28 @@ class TaskRuntime:
         if group is not None:
             group._attach(task)
         if self._live.fetch_add(1) == 0:
-            self._quiescent.clear()
+            with self._quiescent_lock:  # re-check: a racing finalize set()
+                if self._live.load() > 0:
+                    self._quiescent.clear()
         self.tracer.event("task.create", task.task_id)
         self.deps.register_task(task, self._mailbox())
         return ref if handle else task
 
-    def task_group(self, name: str = "") -> TaskGroup:
-        return TaskGroup(self, name)
+    def task_group(self, name: str = "",
+                   cancel_on_error: bool = False) -> TaskGroup:
+        return TaskGroup(self, name, cancel_on_error=cancel_on_error)
 
     def _task_ready(self, task: Task):
         task.ready_ns = time.monotonic_ns()
         self.tracer.event("task.ready", task.task_id)
+        self._observe_arrival(task.ready_ns)
         if self.scheduler_kind == "work-stealing":
             wid = getattr(_current_task, "wid", None)
             self.scheduler.add_ready_task(task, worker_id=wid)
         else:
             self.scheduler.add_ready_task(
                 task, numa_hint=task.affinity or 0)
-        self._wake_workers()
+        # the wake happens via the scheduler's on_enqueue hook
 
     # ---------------------------------------------------------------- work
     def _drop_token(self, task: Task):
@@ -365,19 +491,30 @@ class TaskRuntime:
         if group is not None:
             group._task_done(task)
         if self._live.fetch_add(-1) == 1:
-            self._quiescent.set()
+            with self._quiescent_lock:  # re-check: a racing spawn re-armed
+                if self._live.load() == 0:
+                    self._quiescent.set()
         task.retire()  # stamp the recycling epoch before the pool can reuse
         self.pool.release(task)
         return parent
 
     def _run_task(self, task: Task, wid: int):
-        _current_task.t = task
-        task.start_ns = time.monotonic_ns()
-        self.tracer.event("task.start", task.task_id)
-        task.run()
-        task.end_ns = time.monotonic_ns()
-        self.tracer.event("task.end", task.task_id)
-        _current_task.t = None
+        group = task.group
+        if group is not None and \
+                group._cancel_epoch.load() != task._cancel_epoch:
+            # dropped at dequeue by the cancel token: skip the body but run
+            # the full completion path below, so successors, taskwait and
+            # pool recycling behave as if the body returned None
+            self.tracer.event("task.cancel", task.task_id)
+            task.skip()
+        else:
+            _current_task.t = task
+            task.start_ns = time.monotonic_ns()
+            self.tracer.event("task.start", task.task_id)
+            task.run()
+            task.end_ns = time.monotonic_ns()
+            self.tracer.event("task.end", task.task_id)
+            _current_task.t = None
         if not self._defer_unregister:
             # wait-free deps: TASK_DONE must flow at body completion; the
             # ASM child bits gate successors on nested children, while the
@@ -387,22 +524,49 @@ class TaskRuntime:
         self._drop_token(task)
 
     # -------------------------------------------------------------- parking
-    def _wake_workers(self, all_workers: bool = False):
-        if self._n_parked or all_workers:  # racy read: bounded by park timeout
-            with self._park_cond:
-                self._park_seq += 1
-                if all_workers:
-                    self._park_cond.notify_all()
-                else:
-                    self._park_cond.notify()
+    def _observe_arrival(self, now_ns: int):
+        """Feed the park-timeout EWMA with the task inter-arrival time.
+        Plain racy updates: the estimate is advisory and clamped by every
+        reader, so a torn/lost sample only perturbs the smoothing."""
+        last = self._last_arrival_ns
+        self._last_arrival_ns = now_ns
+        if last:
+            dt = (now_ns - last) * 1e-9
+            if 0.0 <= dt < 1.0:  # idle gaps are the park backoff's job
+                self._ewma_arrival_s += _PARK_EWMA_ALPHA * \
+                    (dt - self._ewma_arrival_s)
+
+    def _park_timeout(self, n_timeouts: int) -> float:
+        """Adaptive park timeout: proportional to observed inter-arrival
+        (bursty fine-grained phases re-poll quickly), doubling per
+        consecutive timeout (idle phases sleep long), clamped to
+        [MIN, MAX]. The eventcount ablation keeps PR-1's fixed timeout."""
+        if self.parking_kind != "slots":
+            return _PARK_TIMEOUT_S
+        base = max(_PARK_EWMA_MULT * self._ewma_arrival_s,
+                   _PARK_TIMEOUT_MIN_S)
+        return min(base * (1 << min(n_timeouts, 8)), _PARK_TIMEOUT_MAX_S)
+
+    def _on_enqueue(self, numa_hint: int = 0,
+                    worker_id: Optional[int] = None):
+        """Scheduler wake hook: a task just became visible — wake exactly
+        one parked worker, preferring the task's NUMA node (or, for
+        work-stealing, the worker whose deque received it)."""
+        prefer_numa = numa_hint if self._n_numa > 1 else None
+        if self._parking.wake_one(prefer_numa=prefer_numa,
+                                  prefer_wid=worker_id):
+            self.tracer.event("worker.wake", numa_hint)
 
     def _worker(self, wid: int):
         _current_task.wid = wid
+        parking = self._parking
         spins = 0
+        n_timeouts = 0
         while not self._stop:
             task = self.scheduler.get_ready_task(wid)
             if task is not None:
                 spins = 0
+                n_timeouts = 0
                 self._run_task(task, wid)
                 continue
             spins += 1
@@ -410,24 +574,31 @@ class TaskRuntime:
                 self.tracer.event("worker.idle", wid)
                 time.sleep(0)  # yield once before escalating to a park
                 continue
-            # publish parked, then re-poll: a producer that missed the
-            # published count has enqueued before our re-poll and is seen
-            with self._park_cond:
-                seq = self._park_seq
-                self._n_parked += 1
+            # futex protocol: publish POLLING, then re-poll — a producer
+            # that missed the published state enqueued before our re-poll
+            token = parking.begin_poll(wid)
             task = self.scheduler.get_ready_task(wid)
             if task is not None:
-                with self._park_cond:
-                    self._n_parked -= 1
+                parking.cancel_poll(wid)
                 spins = 0
+                n_timeouts = 0
+                # wake chaining: single-wake producers wake one worker per
+                # task; if more work is already queued while peers are
+                # still parked, pass the wake along
+                if parking.n_idle and self.scheduler.pending():
+                    self._on_enqueue()
                 self._run_task(task, wid)
                 continue
+            if self._stop:
+                parking.cancel_poll(wid)
+                break
             self.tracer.event("worker.park", wid)
-            with self._park_cond:
-                if self._park_seq == seq and not self._stop:
-                    self._park_cond.wait(timeout=_PARK_TIMEOUT_S)
-                self._n_parked -= 1
-            spins = 0
+            if parking.park(wid, token, self._park_timeout(n_timeouts)):
+                n_timeouts = 0
+                spins = 0  # woken: poll, then spin briefly before re-park
+            else:
+                n_timeouts += 1
+                spins = _PARK_AFTER_SPINS  # timed out: skip the spin phase
 
     # ---------------------------------------------------------------- sync
     def taskwait(self, task: Union[Task, TaskRef],
@@ -475,4 +646,7 @@ class TaskRuntime:
         return {"pool": self.pool.stats,
                 "pending": self.scheduler.pending(),
                 "live": self._live.load(),
-                "parked": self._n_parked}
+                "parked": self._parking.n_parked,
+                "parks": self._parking.parks.load(),
+                "wakes": self._parking.wakes.load(),
+                "mailboxes": self._mb_pool.stats}

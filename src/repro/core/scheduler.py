@@ -10,7 +10,11 @@
 - WorkStealingScheduler: per-worker deques + steal; stands in for the
   LLVM/Intel OpenMP comparison baseline.
 
-All schedulers expose add_ready_task(task) / get_ready_task(worker_id).
+All schedulers expose add_ready_task(task) / get_ready_task(worker_id), and
+an ``on_enqueue`` wake hook: when set, it is called once per add_ready_task
+AFTER the task is visible to consumers (with the NUMA / owning-worker hint),
+so the runtime can wake exactly one parked worker next to the enqueue
+instead of broadcasting from a distance.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ class UnsyncScheduler:
         self.policy = policy
         self._q = deque()
         self._local: dict[int, deque] = {}
+        self.on_enqueue = None  # wake hook (top-level standalone use only)
 
     def add_ready_task(self, task):
         hint = getattr(task, "affinity", None)
@@ -37,15 +42,23 @@ class UnsyncScheduler:
             self._local.setdefault(hint, deque()).append(task)
         else:
             self._q.append(task)
+        if self.on_enqueue is not None:
+            self.on_enqueue(hint or 0)
 
     def get_ready_task(self, worker_id: int):
         if self.policy == "locality":
+            # own hinted queue first, then the global queue, then steal:
+            # stealing before checking _q starves un-hinted tasks behind
+            # remote-hinted ones
             lq = self._local.get(worker_id)
             if lq:
                 return lq.popleft()
+            if self._q:
+                return self._q.popleft()
             for q in self._local.values():
                 if q:
                     return q.popleft()
+            return None
         if not self._q:
             return None
         if self.policy == "lifo":
@@ -79,17 +92,25 @@ class SyncScheduler:
         self._add_locks = [PTLock(size) for _ in range(self._numa)]
         self._instr = instrument
         self._max_add_spins = max_add_spins
+        self.on_enqueue = None  # wake hook: called after the task is visible
 
     # -- producer side ------------------------------------------------
     def add_ready_task(self, task, numa_hint: int = 0):
+        self._add(task, numa_hint)
+        if self.on_enqueue is not None:
+            self.on_enqueue(numa_hint)
+
+    def _add(self, task, numa_hint: int):
         q = self._add_queues[numa_hint % self._numa]
         lk = self._add_locks[numa_hint % self._numa]
         spins = 0
         while True:
             if not q.full:  # racy pre-check skips the lock when doomed
                 lk.lock()
-                added = q.push(task)
-                lk.unlock()
+                try:  # a raising push must not poison the producer lock
+                    added = q.push(task)
+                finally:
+                    lk.unlock()
                 if added:
                     return
             # buffer full: try to become the scheduler server and insert
@@ -110,11 +131,15 @@ class SyncScheduler:
 
     def _insert_direct(self, task):
         """Called with the DTLock held: drain buffers, insert the task into
-        the policy container, serve delegating waiters, release."""
-        self._process_ready_tasks()
-        self._sched.add_ready_task(task)
-        self._serve_waiters()
-        self._lock.unlock()
+        the policy container, serve delegating waiters, release. The DTLock
+        is released even if the policy container raises — a leaked lock
+        here would deadlock every worker."""
+        try:
+            self._process_ready_tasks()
+            self._sched.add_ready_task(task)
+            self._serve_waiters()
+        finally:
+            self._lock.unlock()
 
     def _process_ready_tasks(self):
         for q in self._add_queues:
@@ -141,10 +166,12 @@ class SyncScheduler:
             if self._instr:
                 self._instr.event("sched.delegated", worker_id)
             return item
-        self._process_ready_tasks()
-        self._serve_waiters()
-        task = self._sched.get_ready_task(worker_id)
-        self._lock.unlock()
+        try:
+            self._process_ready_tasks()
+            self._serve_waiters()
+            task = self._sched.get_ready_task(worker_id)
+        finally:
+            self._lock.unlock()
         return task
 
     def pending(self) -> int:
@@ -158,16 +185,23 @@ class GlobalLockScheduler:
                  lock_cls=PTLock, **kw):
         self._sched = UnsyncScheduler(policy)
         self._lock = lock_cls(max(64, 2 * n_workers))
+        self.on_enqueue = None  # wake hook: called after the task is visible
 
     def add_ready_task(self, task, numa_hint: int = 0):
         self._lock.lock()
-        self._sched.add_ready_task(task)
-        self._lock.unlock()
+        try:  # a poisoned policy container must not leak the global lock
+            self._sched.add_ready_task(task)
+        finally:
+            self._lock.unlock()
+        if self.on_enqueue is not None:
+            self.on_enqueue(numa_hint)
 
     def get_ready_task(self, worker_id: int):
         self._lock.lock()
-        task = self._sched.get_ready_task(worker_id)
-        self._lock.unlock()
+        try:
+            task = self._sched.get_ready_task(worker_id)
+        finally:
+            self._lock.unlock()
         return task
 
     def pending(self) -> int:
@@ -187,14 +221,24 @@ class WorkStealingScheduler:
         self.n = max(1, n_workers)
         self._qs = [deque() for _ in range(self.n)]
         self._lks = [MutexLock() for _ in range(self.n)]
-        self._rng = random.Random(seed)
+        # one RNG per worker: a shared random.Random is both a contention
+        # point (its internal state is mutated on every steal from every
+        # thread) and a reproducibility bug (victim sequences depend on
+        # thread interleaving)
+        self._rngs = [random.Random(seed * 0x9E3779B1 + wid)
+                      for wid in range(self.n)]
+        self.on_enqueue = None  # wake hook: called after the task is visible
 
     def add_ready_task(self, task, numa_hint: int = 0, worker_id: Optional[int] = None):
         wid = worker_id if worker_id is not None else 0
         i = wid % self.n
         self._lks[i].lock()
-        self._qs[i].append(task)
-        self._lks[i].unlock()
+        try:
+            self._qs[i].append(task)
+        finally:
+            self._lks[i].unlock()
+        if self.on_enqueue is not None:
+            self.on_enqueue(numa_hint, worker_id=i)
 
     def get_ready_task(self, worker_id: int):
         i = worker_id % self.n
@@ -203,8 +247,8 @@ class WorkStealingScheduler:
         self._lks[i].unlock()
         if task is not None:
             return task
-        # steal FIFO from a random victim
-        start = self._rng.randrange(self.n)
+        # steal FIFO from a random victim (per-worker RNG)
+        start = self._rngs[i].randrange(self.n)
         for k in range(self.n):
             v = (start + k) % self.n
             if v == i:

@@ -45,12 +45,19 @@ class SPSCQueue:
         return item
 
     def consume_all(self, fn) -> int:
+        """Drain into fn, consuming each slot only after fn returns: if fn
+        raises (e.g. a poisoned policy container during a scheduler drain),
+        the in-flight item stays queued for the next drain instead of being
+        silently dropped."""
         n = 0
         while True:
-            item = self.pop()
-            if item is None:
+            tail = self._tail
+            if tail == self._head:  # empty
                 return n
-            fn(item)
+            item = self._buf[tail]
+            fn(item)  # may raise: the slot is not yet consumed
+            self._buf[tail] = None
+            self._tail = (tail + 1) % self._cap  # publish consumption
             n += 1
 
     def __len__(self):

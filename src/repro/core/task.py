@@ -37,7 +37,8 @@ class Task:
                  "parent", "_pending", "_access_map", "state", "result",
                  "affinity", "on_ready", "_completion", "_done_event",
                  "exception", "created_ns", "ready_ns", "start_ns", "end_ns",
-                 "pooled", "generation", "group", "_lineage_keys")
+                 "pooled", "generation", "group", "_lineage_keys",
+                 "_cancel_epoch")
 
     def __init__(self):
         self.generation = 0
@@ -65,6 +66,7 @@ class Task:
         self.pooled = False
         self.group = None
         self._lineage_keys: set = set()  # child-domain lineages (deps prune)
+        self._cancel_epoch = 0  # group cancel token stamped at spawn
 
     # ------------------------------------------------------------ build
     def init(self, fn, args=(), kwargs=None, *, name="", parent=None,
@@ -121,6 +123,14 @@ class Task:
             self.result = self.fn(*self.args, **self.kwargs)
         except BaseException as e:  # surfaced by runtime
             self.exception = e
+        self.state = DONE
+        ev = self._done_event
+        if ev is not None:
+            ev.set()
+
+    def skip(self):
+        """Complete without running the body (group-cancelled task dropped
+        at dequeue): observers see a normal DONE task with a None result."""
         self.state = DONE
         ev = self._done_event
         if ev is not None:

@@ -60,12 +60,23 @@ class ServeEngine:
         self._free_lock = threading.Lock()
         self._queue: list[Request] = []
         self._qlock = threading.Lock()
+        # admitted requests whose prefill has not completed yet (slot ->
+        # Request): stop(drain=False) must release these waiters too — a
+        # cancelled prefill never runs, so it never reaches self.active
+        self._admitted: dict[int, Request] = {}
+        self._admitted_lock = threading.Lock()
         self._stop = False
         # all engine tasks (prefills + decode iterations) run in one
         # TaskGroup: completion tracking without retaining pooled Task
         # objects (holding a non-retained Task across its completion is a
-        # use-after-recycle; see the TaskRuntime lifecycle contract)
-        self.group = runtime.task_group("serve")
+        # use-after-recycle; see the TaskRuntime lifecycle contract).
+        # cancel_on_error: the first failing engine task cancels the group,
+        # which stops the self-respawning decode chain and drops queued
+        # engine tasks instead of letting errors pile up per iteration
+        self.group = runtime.task_group("serve", cancel_on_error=True)
+        # ANY cancel — stop(drain=False) or the first task error — must
+        # release every blocked client, not just the explicit-stop path
+        self.group.on_cancel = self._release_waiters
         self._next_id = 0
         self._decode_fn = jax.jit(self._decode_batch)
         self.stats = {"prefills": 0, "decode_iters": 0, "tokens": 0}
@@ -93,12 +104,15 @@ class ServeEngine:
             req = Request(np.asarray(prompt, np.int32), max_new_tokens,
                           id=self._next_id, on_token=on_token)
             self._next_id += 1
-            self._queue.append(req)
+            if not self.group.cancelled:  # terminal engine never drains the
+                self._queue.append(req)   # queue again: don't grow it
+        if self.group.cancelled:
+            req.done_event.set()
         return req
 
     def _admit(self):
         """Move queued requests into free slots (spawns prefill tasks)."""
-        while True:
+        while not self.group.cancelled:
             with self._free_lock:
                 if not self._free:
                     return
@@ -108,16 +122,25 @@ class ServeEngine:
                 req = self._queue.pop(0)
             with self._free_lock:
                 slot = self._free.pop(0)
+            with self._admitted_lock:
+                self._admitted[slot] = req
             # detached: prefills are admitted from inside a decode task but
             # are not nested work of that iteration. The commutative "cache"
             # access makes concurrent prefills mutually exclusive (the
             # whole-tree cache splice is a read-modify-write) while leaving
             # their order free — per-slot addresses alone would let two
             # prefills interleave and lose one slot's KV.
-            self.group.spawn(self._prefill_task, (req, slot),
-                             name=f"prefill:{req.id}", detached=True,
-                             rw=[("slot", slot)], reads=["params"],
-                             commutative=["cache"])
+            t = self.group.spawn(self._prefill_task, (req, slot),
+                                 name=f"prefill:{req.id}", detached=True,
+                                 rw=[("slot", slot)], reads=["params"],
+                                 commutative=["cache"])
+            if t is None:  # group cancelled concurrently: return the slot
+                with self._admitted_lock:
+                    self._admitted.pop(slot, None)
+                with self._free_lock:
+                    self._free.append(slot)
+                req.done_event.set()  # never admitted; unblock its waiter
+                return
 
     def _prefill_task(self, req: Request, slot: int):
         L = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
@@ -140,6 +163,8 @@ class ServeEngine:
         if req.on_token:
             req.on_token(first)
         self.active[slot] = req
+        with self._admitted_lock:  # visible in active BEFORE leaving here:
+            self._admitted.pop(slot, None)  # stop() always sees one of them
         self.stats["prefills"] += 1
 
     def _decode_iter(self):
@@ -195,11 +220,34 @@ class ServeEngine:
     def stop(self, drain: bool = True, timeout: float = 60.0) -> bool:
         """Stop the decode loop. With drain=True, block until every engine
         task (in-flight prefills + the final decode iteration) fully
-        finished, re-raising the first task error if any occurred."""
+        finished, re-raising the first task error if any occurred. With
+        drain=False, cancel the engine's TaskGroup instead: no further
+        spawns are admitted, still-queued engine tasks (including the next
+        decode iteration) are dropped at dequeue, and only the task already
+        mid-body runs to completion — the engine is terminal after this.
+        Every unfinished request (queued, admitted or mid-decode) gets its
+        done_event set so no client blocks in wait(); callers inspect
+        req.tokens for whatever was produced before the cancel. The same
+        release runs when the group self-cancels on a task error."""
         self._stop = True
         if drain:
             return self.group.wait(timeout=timeout)
+        self.group.cancel()  # -> on_cancel -> _release_waiters (once)
         return True
+
+    def _release_waiters(self):
+        """Unblock every client of an unfinished request (group.on_cancel)."""
+        with self._qlock:
+            pending, self._queue = self._queue, []
+        for req in pending:
+            req.done_event.set()
+        with self._admitted_lock:  # admitted, prefill dropped by the cancel
+            admitted = list(self._admitted.values())
+        for req in admitted:
+            req.done_event.set()
+        for req in list(self.active):
+            if req is not None:
+                req.done_event.set()
 
     def wait(self, req: Request, timeout: float = 120.0) -> bool:
         return req.done_event.wait(timeout)

@@ -92,6 +92,62 @@ def test_serving_end_to_end():
     assert eng.stats["prefills"] == 4
 
 
+def test_serving_stop_without_drain_cancels_decode_chain():
+    """stop(drain=False) cancels the engine's TaskGroup: the self-respawning
+    decode chain stops at the next dequeue, no stale-task errors surface,
+    and no pooled tasks leak."""
+    import time
+
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rt = TaskRuntime(n_workers=3).start()
+    eng = ServeEngine(cfg, params, rt, n_slots=2, max_seq=48).start()
+    req = eng.submit(np.arange(4), max_new_tokens=40)  # long decode
+    deadline = time.monotonic() + 120
+    while eng.stats["decode_iters"] < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert eng.stats["decode_iters"] >= 3, "decode chain never started"
+    assert eng.stop(drain=False)
+    assert eng.group.cancelled
+    # unfinished requests are released, not left hanging in wait()
+    assert eng.wait(req, timeout=10), "cancelled request left waiter hanging"
+    assert rt.barrier(timeout=60), "cancelled engine did not quiesce"
+    iters = eng.stats["decode_iters"]
+    time.sleep(0.2)
+    assert eng.stats["decode_iters"] == iters, "decode chain kept running"
+    assert eng.group.spawn(lambda: None) is None  # admission stays closed
+    deadline = time.monotonic() + 5
+    while rt.pool.outstanding and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert rt.pool.outstanding == 0, "cancelled engine leaked pooled tasks"
+    rt.shutdown()  # raises if any stale-task / engine error was recorded
+
+
+def test_serving_error_cancel_releases_waiters():
+    """A failing engine task self-cancels the group (cancel_on_error);
+    clients blocked in wait() must be released, not left to time out."""
+    import time
+
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rt = TaskRuntime(n_workers=2).start()
+    eng = ServeEngine(cfg, params, rt, n_slots=2, max_seq=32)
+    eng._prefill_one = lambda tokens: (_ for _ in ()).throw(
+        RuntimeError("injected prefill failure"))
+    eng.start()
+    req = eng.submit(np.arange(4), max_new_tokens=4)
+    assert eng.wait(req, timeout=30), "client hung after engine error"
+    assert eng.group.cancelled
+    assert rt.barrier(timeout=60)
+    # late submits on the dead engine complete immediately and don't
+    # accumulate in the never-drained queue
+    late = eng.submit(np.arange(3), max_new_tokens=2)
+    assert eng.wait(late, timeout=10)
+    assert not eng._queue, "terminal engine leaked late-submitted requests"
+    with pytest.raises(RuntimeError, match="injected prefill failure"):
+        rt.shutdown()
+
+
 def test_serving_matches_sequential_decode():
     """Continuous-batching decode must equal per-request greedy decode."""
     from repro.models import forward

@@ -1,0 +1,524 @@
+"""Parking-slot subsystem + TaskGroup cancellation tests.
+
+Pins the PR-2 wakeup-path behaviors: futex-style per-worker slots cannot
+lose wakeups (N producers x M parked workers, 10k tasks, bounded latency,
+zero hangs), wake_one wakes exactly one worker, adaptive park timeouts
+clamp and back off, and group cancellation drops queued tasks at dequeue
+without stale-task errors or leaked pooled tasks — in both dependency modes
+and under both parking designs.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import TaskRuntime
+from repro.core.parking import (PARKED, POLLING, RUNNING, EventcountParking,
+                                ParkingLot)
+
+PARKING = ["slots", "eventcount"]
+DEPS = ["waitfree", "locked"]
+
+
+def _drain_pool(rt, timeout=5.0) -> int:
+    """Outstanding pooled tasks, after letting in-flight finalizers land:
+    barrier() returns on the live-count hitting zero, which happens a few
+    instructions before the final pool.release."""
+    deadline = time.monotonic() + timeout
+    while rt.pool.outstanding and time.monotonic() < deadline:
+        time.sleep(0.005)
+    return rt.pool.outstanding
+
+
+# ------------------------------------------------------------- slot unit
+def test_slot_state_machine_and_wake():
+    lot = ParkingLot(2)
+    assert lot.slots[0].state == RUNNING
+    token = lot.begin_poll(0)
+    assert lot.slots[0].state == POLLING
+    assert lot.n_idle == 1
+    # a wake posted while POLLING bumps the epoch: park returns immediately
+    assert lot.wake_one()
+    assert lot.park(0, token, timeout=5.0)  # no 5s stall: epoch moved
+    assert lot.slots[0].state == RUNNING
+    assert lot.n_idle == 0
+    # cancel_poll path
+    token = lot.begin_poll(0)
+    lot.cancel_poll(0)
+    assert lot.n_idle == 0 and lot.slots[0].state == RUNNING
+
+
+def test_wake_one_wakes_exactly_one():
+    lot = ParkingLot(4)
+    woken = []
+    started = threading.Barrier(5)
+
+    def worker(wid):
+        token = lot.begin_poll(wid)
+        started.wait()
+        if lot.park(wid, token, timeout=2.0):
+            woken.append(wid)
+
+    ths = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in ths:
+        t.start()
+    started.wait()
+    deadline = time.monotonic() + 2.0
+    while lot.n_parked < 4 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert lot.wake_one()
+    for t in ths:
+        t.join(timeout=5)
+    assert len(woken) == 1, f"single wake reached {woken}"
+
+
+def test_wake_one_fans_out_over_burst():
+    """K wakes posted back-to-back reach K distinct parked workers."""
+    lot = ParkingLot(4)
+    woken = []
+    lock = threading.Lock()
+
+    def worker(wid):
+        token = lot.begin_poll(wid)
+        if lot.park(wid, token, timeout=2.0):
+            with lock:
+                woken.append(wid)
+
+    ths = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in ths:
+        t.start()
+    deadline = time.monotonic() + 2.0
+    while lot.n_parked < 4 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    for _ in range(3):
+        assert lot.wake_one()
+    for t in ths:
+        t.join(timeout=5)
+    assert sorted(set(woken)) == sorted(woken) and len(woken) == 3, woken
+
+
+def test_concurrent_wakes_reach_distinct_workers():
+    """Two producers waking concurrently must reach two workers — the
+    pending_wake re-check under the slot lock prevents both wakes from
+    collapsing onto whichever slot both scans happened to pick."""
+    for _ in range(20):
+        lot = ParkingLot(2)
+        woken = []
+        lock = threading.Lock()
+
+        def worker(wid):
+            token = lot.begin_poll(wid)
+            if lot.park(wid, token, timeout=2.0):
+                with lock:
+                    woken.append(wid)
+
+        ths = [threading.Thread(target=worker, args=(w,)) for w in range(2)]
+        for t in ths:
+            t.start()
+        deadline = time.monotonic() + 2.0
+        while lot.n_parked < 2 and time.monotonic() < deadline:
+            time.sleep(0.001)
+        go = threading.Barrier(2)
+
+        def producer():
+            go.wait()
+            assert lot.wake_one()
+
+        ps = [threading.Thread(target=producer) for _ in range(2)]
+        for p in ps:
+            p.start()
+        for p in ps:
+            p.join(timeout=5)
+        for t in ths:
+            t.join(timeout=5)
+        assert sorted(woken) == [0, 1], woken
+
+
+def test_wake_one_retries_past_raced_slot():
+    """A candidate that slips back to RUNNING between the racy scan and its
+    lock must not swallow the wake: the next parked worker gets it."""
+    lot = ParkingLot(2)
+    woken = []
+
+    def worker():
+        token = lot.begin_poll(1)
+        if lot.park(1, token, timeout=2.0):
+            woken.append(1)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    deadline = time.monotonic() + 2.0
+    while lot.n_parked < 1 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    # simulate the race: slot 0 looks PARKED to the scan but its wake post
+    # fails (the worker went RUNNING before the lock was taken)
+    orig = lot._post_wake
+    posts = []
+
+    def flaky(s):
+        posts.append(s.wid)
+        if s.wid == 0:
+            return False
+        return orig(s)
+
+    lot._post_wake = flaky
+    lot.slots[0].state = PARKED  # stale observation, no thread behind it
+    assert lot.wake_one()
+    th.join(timeout=5)
+    lot.slots[0].state = RUNNING
+    assert woken == [1], (woken, posts)
+    assert 0 in posts and 1 in posts  # slot 0 was tried first and skipped
+
+
+def test_wake_one_prefers_numa_and_wid():
+    lot = ParkingLot(4, n_numa=2)  # numa: wid % 2
+    parked = threading.Barrier(5)
+    results = {}
+
+    def worker(wid):
+        token = lot.begin_poll(wid)
+        parked.wait()
+        results[wid] = lot.park(wid, token, timeout=2.0)
+
+    ths = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in ths:
+        t.start()
+    parked.wait()
+    deadline = time.monotonic() + 2.0
+    while lot.n_parked < 4 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert lot.wake_one(prefer_wid=3)
+    time.sleep(0.1)
+    assert results.get(3) is True, results
+    assert lot.wake_one(prefer_numa=1)  # slots 1 is the remaining numa-1
+    for t in ths:
+        t.join(timeout=5)
+    assert results[1] is True, results
+    assert results[0] is False and results[2] is False, results
+
+
+def test_no_lost_wakeup_publish_then_enqueue_race():
+    """The futex protocol: whatever interleaving, a task enqueued around
+    begin_poll is either seen by the re-poll or wakes the parked worker."""
+    lot = ParkingLot(1)
+    queue = []
+    got = []
+
+    deadline = time.monotonic() + 30
+
+    def worker():
+        while len(got) < 200 and time.monotonic() < deadline:
+            if queue:
+                got.append(queue.pop())
+                continue
+            token = lot.begin_poll(0)
+            if queue:  # the mandated re-poll
+                lot.cancel_poll(0)
+                got.append(queue.pop())
+                continue
+            lot.park(0, token, timeout=0.5)
+
+    def producer():
+        for i in range(200):
+            queue.append(i)
+            lot.wake_one()
+            time.sleep(0.0003)
+
+    tw = threading.Thread(target=worker)
+    tp = threading.Thread(target=producer)
+    tw.start()
+    tp.start()
+    tp.join(timeout=35)
+    tw.join(timeout=35)
+    assert not tw.is_alive()
+    assert len(got) == 200
+
+
+# ------------------------------------------------- runtime stress (10k)
+@pytest.mark.parametrize("parking", PARKING)
+def test_lost_wakeup_stress_many_producers(parking):
+    """N producers x M (mostly parked) workers, 10k tasks with arrival
+    gaps that force park/wake cycling: zero hangs, every task runs, and
+    per-task wake latency stays bounded."""
+    rt = TaskRuntime(n_workers=8, parking=parking).start()
+    N_PROD, PER = 4, 2500
+    done = [0]
+    lock = threading.Lock()
+
+    def body():
+        with lock:
+            done[0] += 1
+
+    def producer(p):
+        for i in range(PER):
+            rt.spawn(body)
+            if i % 50 == 0:
+                time.sleep(0.002)  # let workers park between bursts
+
+    ths = [threading.Thread(target=producer, args=(p,)) for p in range(N_PROD)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join(timeout=120)
+    assert rt.barrier(timeout=120), f"{parking}: runtime did not quiesce"
+    rt.shutdown()
+    assert done[0] == N_PROD * PER
+
+
+@pytest.mark.parametrize("parking", PARKING)
+def test_wake_latency_bounded(parking):
+    """Sparse arrivals against fully parked workers: the spawn->start gap
+    is wakeup latency and must stay far below the park-timeout ceiling
+    (a lost wakeup would show up as a ~250ms outlier)."""
+    rt = TaskRuntime(n_workers=8, parking=parking).start()
+    time.sleep(0.2)  # everyone parks
+    lat = []
+    for _ in range(60):
+        t = rt.spawn(lambda: None, retain=True)
+        assert rt.taskwait(t, timeout=30)
+        lat.append((t.start_ns - t.ready_ns) / 1e9)
+        time.sleep(0.002)
+    rt.shutdown()
+    lat.sort()
+    # generous CI bounds: median far under the smallest park timeout,
+    # worst case far under a single 250ms timeout cycle
+    assert lat[len(lat) // 2] < 0.05, f"median wake {lat[len(lat)//2]}s"
+    assert lat[-1] < 2.0, f"max wake {lat[-1]}s"
+
+
+def test_adaptive_park_timeout_clamps_and_backs_off():
+    from repro.core.runtime import (_PARK_TIMEOUT_MAX_S, _PARK_TIMEOUT_MIN_S,
+                                    _PARK_TIMEOUT_S)
+    rt = TaskRuntime(n_workers=1)
+    # burst regime: tiny inter-arrival -> floor
+    rt._ewma_arrival_s = 1e-6
+    assert rt._park_timeout(0) == _PARK_TIMEOUT_MIN_S
+    # consecutive timeouts double the sleep up to the ceiling
+    ts = [rt._park_timeout(k) for k in range(10)]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert ts[-1] == _PARK_TIMEOUT_MAX_S
+    # idle regime: large inter-arrival -> ceiling, never beyond
+    rt._ewma_arrival_s = 10.0
+    assert rt._park_timeout(0) == _PARK_TIMEOUT_MAX_S
+    # the eventcount ablation keeps the PR-1 fixed timeout
+    rt2 = TaskRuntime(n_workers=1, parking="eventcount")
+    assert rt2._park_timeout(5) == _PARK_TIMEOUT_S
+
+
+def test_ewma_tracks_interarrival():
+    rt = TaskRuntime(n_workers=1)
+    rt._last_arrival_ns = 0
+    now = 1_000_000_000
+    for _ in range(200):  # steady 1ms arrivals converge the EWMA
+        rt._observe_arrival(now)
+        now += 1_000_000
+    assert 0.0008 < rt._ewma_arrival_s < 0.0012
+
+
+# ------------------------------------------------------ mailbox reuse
+def test_mailbox_pool_reuses_across_threads():
+    rt = TaskRuntime(n_workers=2).start()
+    for _ in range(3):
+        ths = [threading.Thread(target=lambda: rt.spawn(lambda: None))
+               for _ in range(4)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join(timeout=30)
+        assert rt.barrier(timeout=30)
+        import gc
+        gc.collect()  # drop dead threads' locals -> leases release boxes
+    rt.shutdown()
+    st = rt._mb_pool.stats
+    assert st["reuses"] > 0, st  # transient producer threads shared boxes
+
+
+def test_mailbox_message_freelist_recycles():
+    from repro.core.asm import MailBox
+    delivered = []
+    mb = MailBox(lambda a: delivered.append(a))
+
+    class FakeFlags:
+        def __init__(self):
+            self.v = 0
+
+        def fetch_or(self, bits):
+            old, self.v = self.v, self.v | bits
+            return old
+
+        def fetch_add(self, delta=1):
+            old, self.v = self.v, self.v + delta
+            return old
+
+    class FakeAccess:
+        def __init__(self):
+            self.flags = FakeFlags()
+            self.deliveries = FakeFlags()
+
+        def ready_bits_options(self):
+            return ()
+
+        atype = -1
+
+    a = FakeAccess()
+    mb.send(a, 1)
+    mb.deliver_all()
+    assert len(mb._free) == 1
+    recycled = mb._free[0]
+    assert recycled.to is None and recycled.from_ is None
+    mb.send(a, 2)
+    assert mb._q[0] is recycled  # same object reused, no allocation
+    mb.deliver_all()
+
+
+# ------------------------------------------------------- pool accounting
+def test_outstanding_drains_with_retained_tasks():
+    """retain=True tasks come from the pool but are never recycled; they
+    must still leave the outstanding count at finalize (a retained task is
+    held by its caller, not leaked)."""
+    rt = TaskRuntime(n_workers=2).start()
+    ts = [rt.spawn(lambda: 1, retain=True) for _ in range(20)]
+    for _ in range(50):
+        rt.spawn(lambda: None)
+    assert rt.barrier(timeout=60)
+    assert _drain_pool(rt) == 0
+    assert all(t.result == 1 for t in ts)  # results stay readable
+    rt.shutdown()
+
+
+# ------------------------------------------------------- cancellation
+@pytest.mark.parametrize("deps", DEPS)
+def test_cancel_drops_queued_tasks_no_leaks(deps):
+    """Queued group tasks behind a blocker are dropped at dequeue; the
+    completion path still runs: no leaked pooled tasks, no stale errors,
+    successors of dropped tasks become ready."""
+    rt = TaskRuntime(n_workers=1, deps=deps).start()
+    g = rt.task_group("cancel")
+    gate = threading.Event()
+    ran = [0]
+    g.spawn(lambda: gate.wait(10))
+    for _ in range(100):
+        g.spawn(lambda: ran.__setitem__(0, ran[0] + 1), rw=["chain"])
+    g.cancel()
+    assert g.spawn(lambda: None) is None  # admission refused
+    gate.set()
+    assert g.wait(timeout=60)
+    assert rt.barrier(timeout=60)
+    assert ran[0] == 0, "queued member tasks ran after cancel"
+    assert _drain_pool(rt) == 0, "dropped tasks leaked from the pool"
+    assert rt._live.load() == 0
+    # non-member tasks sequenced after dropped ones still run
+    after = [0]
+    rt.spawn(lambda: after.__setitem__(0, 1), rw=["chain"])
+    assert rt.barrier(timeout=60)
+    assert after[0] == 1
+    rt.shutdown()
+
+
+@pytest.mark.parametrize("deps", DEPS)
+def test_cancel_stops_detached_respawn_chain(deps):
+    """The serve-engine decode pattern: a detached task respawning itself
+    through the group stops at cancel without draining or erroring."""
+    rt = TaskRuntime(n_workers=2, deps=deps).start()
+    g = rt.task_group("chain")
+    iters = [0]
+
+    def loop():
+        iters[0] += 1
+        g.spawn(loop, detached=True, rw=["decode"])
+
+    g.spawn(loop, detached=True, rw=["decode"])
+    deadline = time.monotonic() + 10
+    while iters[0] < 20 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert iters[0] >= 20
+    g.cancel()
+    assert g.wait(timeout=60)
+    assert rt.barrier(timeout=60)
+    n = iters[0]
+    time.sleep(0.1)
+    assert iters[0] == n, "chain kept spawning after cancel"
+    assert _drain_pool(rt) == 0
+    rt.shutdown()
+
+
+def test_cancel_on_error_propagates_on_first_error():
+    rt = TaskRuntime(n_workers=2).start()
+    g = rt.task_group("onerr", cancel_on_error=True)
+    survivors = [0]
+    g.spawn(lambda: (_ for _ in ()).throw(ValueError("boom")))
+    # wait until the failure cancelled the group, then try to spawn more
+    deadline = time.monotonic() + 10
+    while not g.cancelled and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert g.cancelled
+    assert g.spawn(lambda: survivors.__setitem__(0, 1)) is None
+    with pytest.raises(ValueError):
+        g.wait(timeout=60)
+    assert survivors[0] == 0
+    assert rt.barrier(timeout=60)
+    with pytest.raises(ValueError):
+        rt.shutdown()  # the runtime keeps its own record
+
+
+def test_on_cancel_callback_fires_once_for_any_cancel_path():
+    rt = TaskRuntime(n_workers=2).start()
+    # explicit cancel
+    g1 = rt.task_group()
+    calls = []
+    g1.on_cancel = lambda: calls.append("explicit")
+    g1.cancel()
+    g1.cancel()
+    assert calls == ["explicit"]
+    # error-triggered cancel (cancel_on_error)
+    g2 = rt.task_group(cancel_on_error=True)
+    g2.on_cancel = lambda: calls.append("error")
+    g2.spawn(lambda: 1 / 0)
+    deadline = time.monotonic() + 10
+    while not g2.cancelled and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert calls == ["explicit", "error"]
+    with pytest.raises(ZeroDivisionError):
+        g2.wait(timeout=60)
+    # a raising callback is recorded as a group error, not propagated
+    g3 = rt.task_group()
+    g3.on_cancel = lambda: (_ for _ in ()).throw(RuntimeError("cb"))
+    g3.cancel()  # must not raise here
+    with pytest.raises(RuntimeError, match="cb"):
+        g3.wait(timeout=60)
+    rt.barrier(timeout=60)
+    with pytest.raises(ZeroDivisionError):
+        rt.shutdown()
+
+
+def test_cancel_taskwait_on_dropped_handle_returns():
+    rt = TaskRuntime(n_workers=1).start()
+    g = rt.task_group()
+    gate = threading.Event()
+    g.spawn(lambda: gate.wait(10))
+    ref = rt.spawn(lambda: None, group=g, handle=True)
+    g.cancel()
+    gate.set()
+    assert g.wait(timeout=60)
+    assert rt.taskwait(ref, timeout=30)  # dropped, not hung
+    rt.shutdown()
+
+
+def test_cancel_is_idempotent_and_running_tasks_finish():
+    rt = TaskRuntime(n_workers=2).start()
+    g = rt.task_group()
+    gate = threading.Event()
+    finished = [0]
+
+    def body():
+        gate.wait(10)
+        finished[0] = 1
+
+    g.spawn(body)
+    time.sleep(0.1)  # let it start
+    g.cancel()
+    g.cancel()
+    gate.set()
+    assert g.wait(timeout=60)
+    assert finished[0] == 1, "mid-body task must not be interrupted"
+    rt.shutdown()

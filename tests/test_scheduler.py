@@ -84,3 +84,113 @@ def test_policies():
         lifo.add_ready_task(i)
     assert [fifo.get_ready_task(0) for _ in range(3)] == [0, 1, 2]
     assert [lifo.get_ready_task(0) for _ in range(3)] == [2, 1, 0]
+
+
+# ------------------------------------------------------ PR-2 bugfix batch
+class _Hinted:
+    def __init__(self, tag, affinity=None):
+        self.tag = tag
+        self.affinity = affinity
+
+    def __repr__(self):
+        return f"_Hinted({self.tag})"
+
+
+def test_locality_prefers_global_queue_before_stealing():
+    """An un-hinted task must not starve behind tasks hinted at siblings."""
+    from repro.core import UnsyncScheduler
+    s = UnsyncScheduler("locality")
+    s.add_ready_task(_Hinted("remote", affinity=1))  # hinted at worker 1
+    s.add_ready_task(_Hinted("global"))              # un-hinted
+    got = s.get_ready_task(0)
+    assert got.tag == "global", f"worker 0 stole instead of serving _q: {got}"
+    # still steals once own queue and the global queue are both empty
+    assert s.get_ready_task(0).tag == "remote"
+    assert s.get_ready_task(0) is None
+
+
+def test_workstealing_per_worker_rngs():
+    """Victim selection uses one RNG per worker: no shared mutable state,
+    and the victim sequence is reproducible per (seed, worker)."""
+    a = WorkStealingScheduler(4, seed=7)
+    b = WorkStealingScheduler(4, seed=7)
+    assert len({id(r) for r in a._rngs}) == 4
+    seq_a = [a._rngs[2].randrange(4) for _ in range(32)]
+    seq_b = [b._rngs[2].randrange(4) for _ in range(32)]
+    assert seq_a == seq_b
+
+
+def test_global_lock_released_when_policy_container_raises():
+    """A poisoned policy container must not leak the global lock (a leaked
+    lock deadlocks every worker on the next add/get)."""
+    s = GlobalLockScheduler(2)
+
+    class Boom(Exception):
+        pass
+
+    orig = s._sched.add_ready_task
+    def poisoned(task):
+        raise Boom()
+    s._sched.add_ready_task = poisoned
+    with pytest.raises(Boom):
+        s.add_ready_task("t1")
+    s._sched.add_ready_task = orig
+    s.add_ready_task("t2")  # would deadlock if the lock leaked
+    assert s.get_ready_task(0) == "t2"
+    assert s.get_ready_task(0) is None
+
+
+def test_sync_producer_lock_released_when_push_raises():
+    """SyncScheduler producer paths: a raising SPSC push must not leak the
+    PTLock, and a raising policy container must not leak the DTLock."""
+    s = SyncScheduler(2, spsc_capacity=4)
+
+    class Boom(Exception):
+        pass
+
+    class PoisonedQueue:
+        full = False
+
+        def push(self, task):
+            raise Boom()
+
+        def consume_all(self, fn):
+            pass
+
+        def __len__(self):
+            return 0
+
+    real_q = s._add_queues[0]
+    s._add_queues[0] = PoisonedQueue()
+    with pytest.raises(Boom):
+        s.add_ready_task("t1")
+    s._add_queues[0] = real_q
+    s.add_ready_task("t2")  # would hang on the leaked PTLock otherwise
+    assert s.get_ready_task(0) == "t2"
+
+    # DTLock path: force the buffer-full direct insert with a poisoned
+    # policy container
+    s2 = SyncScheduler(2, spsc_capacity=1, max_add_spins=2)
+    s2.add_ready_task("fill")  # occupies the 1-slot SPSC buffer
+    orig_add = s2._sched.add_ready_task
+    def poisoned_add(task):
+        raise Boom()
+    s2._sched.add_ready_task = poisoned_add
+    with pytest.raises(Boom):
+        s2.add_ready_task("t3")  # buffer full -> try_lock -> _insert_direct
+    s2._sched.add_ready_task = orig_add
+    s2.add_ready_task("t4")  # would deadlock if the DTLock leaked
+    got = {s2.get_ready_task(0), s2.get_ready_task(0), s2.get_ready_task(0)}
+    assert "fill" in got and "t4" in got
+
+
+def test_on_enqueue_hook_fires_after_visibility():
+    """Every scheduler's wake hook runs once per add, after the task can be
+    dequeued."""
+    for cls in (SyncScheduler, GlobalLockScheduler, WorkStealingScheduler):
+        s = cls(2)
+        seen = []
+        s.on_enqueue = lambda hint=0, worker_id=None: seen.append(
+            s.get_ready_task(0))
+        s.add_ready_task("task")
+        assert seen and seen[0] == "task", (cls.__name__, seen)
