@@ -2,10 +2,18 @@
 # ROADMAP.md; no install step is needed.
 PY ?= python
 
-.PHONY: verify bench-smoke bench-wake bench ci
+.PHONY: verify lint sanitize-smoke bench-smoke bench-wake bench ci
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+lint:
+	PYTHONPATH=src $(PY) tools/lint_runtime.py src/repro
+
+sanitize-smoke:
+	REPRO_SANITIZE=1 REPRO_SANITIZE_REPORT=san-report.jsonl PYTHONPATH=src \
+	  $(PY) -m pytest -q tests/test_lifecycle.py tests/test_parking.py \
+	  tests/test_scheduler.py tests/test_tasksan.py
 
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --smoke --json taskbench-smoke.json
@@ -17,4 +25,4 @@ bench-wake:
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-ci: verify bench-smoke
+ci: lint verify sanitize-smoke bench-smoke

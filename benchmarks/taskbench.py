@@ -201,7 +201,8 @@ def smoke(n_workers: int = 3, benches=("dotprod", "cholesky", "miniamr"),
           gran: str = "fine") -> list:
     """Quick CI-sized sanity run: each benchmark on the full configuration
     (delegation + wait-free deps + pool), fine granularity. Prints
-    ``bench,gran,tasks,tasks_per_s`` CSV rows and asserts quiescence."""
+    ``bench,gran,tasks,tasks_per_s`` CSV rows and asserts quiescence, then
+    guards the disabled-sanitizer hook overhead (<2% of a task period)."""
     import os
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
@@ -216,7 +217,74 @@ def smoke(n_workers: int = 3, benches=("dotprod", "cholesky", "miniamr"),
         rows.append(r)
         print(f"{bench},{gran},{r['tasks']},{r['tasks_per_s']:.0f}",
               flush=True)
+    for r in rows:
+        if r["bench"] == "dotprod":
+            rows.append(sanitize_overhead(r["tasks_per_s"]))
+            break
     return rows
+
+
+def sanitize_overhead(tasks_per_s: float, budget: float = 0.02) -> dict:
+    """Guard: with the sanitizer OFF, every hook site added for tasksan is
+    one attribute load + is-None test. Measure that check's cost on the
+    monitored lock path against a hook-free baseline lock, scale by a
+    generous per-task hook count (runtime ``san`` checks + ASM message
+    deliveries + monitored lock ops), and assert the estimated fraction of
+    the measured dotprod task period stays under ``budget``."""
+    import threading
+    import time as _time
+
+    from repro.core.locks import MutexLock
+
+    class BareLock:
+        """MutexLock as it was before the monitor hooks."""
+
+        def __init__(self):
+            self._lk = threading.Lock()
+
+        def lock(self):
+            self._lk.acquire()
+
+        def unlock(self):
+            self._lk.release()
+
+    N = 200_000
+
+    def pairs_ns(lk) -> float:
+        best = float("inf")
+        for _ in range(3):
+            t0 = _time.perf_counter_ns()
+            for _ in range(N):
+                lk.lock()
+                lk.unlock()
+            best = min(best, (_time.perf_counter_ns() - t0) / N)
+        return best
+
+    bare = BareLock()
+    hooked = MutexLock()
+    # interleave so frequency scaling / noise hits both alike
+    b1, h1 = pairs_ns(bare), pairs_ns(hooked)
+    b2, h2 = pairs_ns(bare), pairs_ns(hooked)
+    bare_ns, hooked_ns = min(b1, b2), min(h1, h2)
+    # one lock/unlock pair exercises two monitor checks
+    check_ns = max(0.0, (hooked_ns - bare_ns) / 2)
+    # per-task hook budget, deliberately overcounted: ~12 runtime `san`
+    # checks (spawn/ready/start/end/finalize/enqueue/pool) + ~8 mailbox
+    # deliveries + ~12 monitored lock ops through the scheduler
+    hooks_per_task = 32
+    task_period_ns = 1e9 / max(tasks_per_s, 1e-9)
+    frac = hooks_per_task * check_ns / task_period_ns
+    row = {"bench": "sanitize-overhead", "gran": "-", "tasks": 0,
+           "tasks_per_s": tasks_per_s, "check_ns": check_ns,
+           "hooks_per_task": hooks_per_task, "overhead_frac": frac}
+    print(f"sanitize-off overhead: {check_ns:.1f}ns/check x "
+          f"{hooks_per_task}/task = {100 * frac:.3f}% of a "
+          f"{task_period_ns / 1e3:.0f}us task period (budget "
+          f"{100 * budget:.0f}%)", flush=True)
+    assert frac < budget, (
+        f"disabled-sanitizer hook overhead {100 * frac:.2f}% exceeds "
+        f"{100 * budget:.0f}% of the dotprod task period")
+    return row
 
 
 # ---------------------------------------------------------- wake latency

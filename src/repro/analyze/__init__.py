@@ -1,0 +1,15 @@
+"""Correctness tooling for the task runtime.
+
+- :mod:`repro.analyze.tsan` — ``tasksan``, the opt-in dynamic sanitizer
+  behind ``TaskRuntime(sanitize=True)``: per-task vector clocks over the
+  dependency system's happens-before edges, shadow state per DataAccess
+  address, and protocol checks for the lifecycle/parking/cancellation
+  invariants (see docs/SANITIZER.md).
+- :mod:`repro.analyze.lint` — the static AST lint with repo-specific rules
+  (``tools/lint_runtime.py`` is the CLI; ``make lint`` runs it over
+  ``src/repro``).
+"""
+from repro.analyze.lint import Finding, run_lint
+from repro.analyze.tsan import TaskSanError, TaskSanitizer
+
+__all__ = ["TaskSanitizer", "TaskSanError", "run_lint", "Finding"]

@@ -1,0 +1,676 @@
+"""tasksan — a happens-before sanitizer for the task runtime.
+
+Opt in with ``TaskRuntime(sanitize=True)`` (raise on shutdown) or
+``TaskRuntime(sanitize="report")`` (collect findings only). The runtime then
+drives the hooks below from its own code paths; with the sanitizer off every
+hook site is a single ``is not None`` attribute check.
+
+Happens-before model
+--------------------
+Each *logical* task (a pooled ``Task`` object at a specific generation) gets
+a vector clock. Edges that join clocks:
+
+* spawn: the child forks the spawner's clock (parent task, or the spawning
+  thread's ambient clock for detached/root spawns);
+* ASM messages: a ``DataAccessMessage`` delivery that carries satisfaction
+  bits (READ_SAT/WRITE_SAT/RED_SAT/CHILD_DONE) with a ``from_`` access joins
+  the sender task's clock into the receiver task's clock — this is exactly
+  the dependency system's own happens-before edge set (R_read/R_red/R_full/
+  R_child/R_parent);
+* locked deps: per-(domain, address) release clocks merged at finalize and
+  joined when a successor becomes ready (the locked system notifies only
+  once every conflicting predecessor fully finished);
+* ``taskwait`` / ``TaskGroup.wait``: the waiter joins the awaited clock(s);
+* cancellation: ``group.cancel()`` happens-before every member skipped at
+  dequeue;
+* parking wake epochs: a posted wake carries the producer's clock to the
+  woken worker's ambient clock.
+
+Checks
+------
+* data races: write-write / read-write / reduction-op conflicts between
+  accesses to the same address with no happens-before edge (vector-clock
+  check against per-address shadow state), plus an *overlap* detector for
+  conflicting accesses whose bodies actually run concurrently (the shadow
+  epoch is only recorded at body end, so overlap needs its own active set);
+* commutative overlap: two COMMUTATIVE accesses to the same address running
+  concurrently — the contract is mutual exclusion with free order;
+* stale generation: a pooled ``Task`` dequeued/executed after the object was
+  recycled into a different logical task;
+* recycled-live: a ``Task`` released to the pool before its completion
+  tokens drained (the subtree-safe pooling invariant);
+* cancel protocol: a task body executed although its group's cancel epoch
+  moved past the task's spawn stamp (must be dropped at dequeue);
+* lost wakeups: a task was enqueued while workers were idle, no wake was
+  posted, and a worker's park then *timed out* with work still pending —
+  the signature of a dropped wake (the futex protocol makes this
+  impossible in the correct runtime);
+* lock-order inversion: a cycle in the acquisition-order graph fed by the
+  acquire/release hooks in :mod:`repro.core.locks`.
+
+Ancestor/descendant accesses to the same address are never reported: a
+child domain holds (a subset of) its parent's access rights by
+construction, and parent bodies legitimately overlap their children.
+
+The sanitizer serializes all its bookkeeping on one internal lock — enabling
+it deliberately trades the wait-free hot path for checkability. It is a
+debugging/CI tool, not a production mode.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import threading
+from typing import Optional
+
+from repro.core.asm import (CHILD_DONE, COMMUTATIVE, READ, READ_SAT,
+                            REDUCTION, RED_SAT, WRITE_SAT, domain_key)
+
+# message bits that constitute a happens-before edge sender -> receiver
+_HB_BITS = READ_SAT | WRITE_SAT | RED_SAT | CHILD_DONE
+
+_MAX_FINDINGS = 1000
+_MAX_ANCESTRY = 64
+
+# finding kinds
+RACE_WW = "race.write-write"
+RACE_RW = "race.read-write"
+RACE_RED = "race.reduction"
+COMMUTATIVE_OVERLAP = "commutative.overlap"
+STALE_GENERATION = "task.stale-generation"
+RECYCLED_LIVE = "task.recycled-live"
+DOUBLE_FINALIZE = "task.double-finalize"
+CANCEL_BODY_RAN = "cancel.body-ran"
+LOST_WAKE = "parking.lost-wake"
+LOCK_ORDER = "lock.order-inversion"
+LOCK_UNHELD = "lock.unheld-release"
+
+KINDS = (RACE_WW, RACE_RW, RACE_RED, COMMUTATIVE_OVERLAP, STALE_GENERATION,
+         RECYCLED_LIVE, DOUBLE_FINALIZE, CANCEL_BODY_RAN, LOST_WAKE,
+         LOCK_ORDER, LOCK_UNHELD)
+
+
+class TaskSanError(RuntimeError):
+    """Raised at shutdown when the sanitizer collected findings."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        lines = [f"tasksan: {len(findings)} finding(s)"]
+        for f in findings[:10]:
+            lines.append(f"  - {f}")
+        if len(findings) > 10:
+            lines.append(f"  ... and {len(findings) - 10} more")
+        super().__init__("\n".join(lines))
+
+
+class Finding:
+    __slots__ = ("kind", "message", "details")
+
+    def __init__(self, kind: str, message: str, **details):
+        self.kind = kind
+        self.message = message
+        self.details = details
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "message": self.message, **self.details}
+
+    def __repr__(self):
+        return f"[{self.kind}] {self.message}"
+
+
+class _Node:
+    """Clock holder for one logical task (object identity x generation)."""
+
+    __slots__ = ("id", "task_id", "name", "gen", "clock", "parent",
+                 "started", "finalized", "released", "skipped")
+
+    def __init__(self, nid: int, task, parent: Optional["_Node"]):
+        self.id = nid
+        self.task_id = task.task_id
+        self.name = task.name
+        self.gen = task.generation
+        self.clock: dict = {}
+        self.parent = parent
+        self.started = False
+        self.finalized = False
+        self.released = False
+        self.skipped = False
+
+    @property
+    def label(self) -> str:
+        return f"task#{self.task_id}({self.name})"
+
+
+class _Ctx:
+    """Per-thread ambient context: pseudo-node clock + current task +
+    held-lock stack for the lock-order graph."""
+
+    __slots__ = ("id", "clock", "current", "held")
+
+    def __init__(self, nid: int):
+        self.id = nid
+        self.clock = {nid: 1}
+        self.current: Optional[_Node] = None
+        self.held: list = []
+
+
+class _Shadow:
+    """Per-address shadow state: last write epoch, read epochs, reduction
+    epochs (with their operator). An epoch is (node, tick)."""
+
+    __slots__ = ("write", "readers", "reds")
+
+    def __init__(self):
+        self.write = None           # (node, tick)
+        self.readers: dict = {}     # node -> tick
+        self.reds: dict = {}        # node -> (tick, op)
+
+
+def _join(dst: dict, src: dict) -> None:
+    for k, v in src.items():
+        if dst.get(k, 0) < v:
+            dst[k] = v
+
+
+def _related(a: _Node, b: _Node) -> bool:
+    """Ancestor/descendant task domains share access rights by design."""
+    n = a
+    for _ in range(_MAX_ANCESTRY):
+        if n is None:
+            break
+        if n is b:
+            return True
+        n = n.parent
+    n = b
+    for _ in range(_MAX_ANCESTRY):
+        if n is None:
+            return False
+        if n is a:
+            return True
+        n = n.parent
+    return False
+
+
+class TaskSanitizer:
+    def __init__(self, runtime=None, raise_on_shutdown: bool = True):
+        self._rt = runtime
+        self.raise_on_shutdown = raise_on_shutdown
+        self._lock = threading.RLock()
+        self._tls = threading.local()
+        self._ids = itertools.count(1)
+        self.findings: list[Finding] = []
+        self._dropped = 0
+        self._shadow: dict = {}          # address -> _Shadow
+        self._active: dict = {}          # address -> {node: (atype, red_op)}
+        self._deps_mode = getattr(getattr(runtime, "deps", None), "name",
+                                  "waitfree")
+        self._release_clocks: dict = {}  # locked mode: domain_key -> clock
+        # lock-order graph over watched lock instances
+        self._lock_edges: dict = {}      # id(lock) -> set(id(lock))
+        self._lock_names: dict = {}      # id(lock) -> label
+        self._lock_cycles_seen: set = set()
+        # lost-wake detector state
+        self._armed_lost_wake = False
+        self._lost_wake_reported = False
+        # wake-epoch clock transfer (producer -> woken worker ambient)
+        self._wake_clocks: dict = {}     # wid -> clock snapshot
+
+    # ------------------------------------------------------------ install
+    def install(self, runtime) -> None:
+        """Attach to a runtime's components: pool, parking, scheduler locks.
+        MailBoxes are tagged per-lease by ``TaskRuntime._mailbox``."""
+        self._rt = runtime
+        self._deps_mode = runtime.deps.name
+        runtime.pool.san = self
+        runtime._parking.san = self
+        sched = runtime.scheduler
+        for attr, label in (("_lock", "scheduler.dtlock"),):
+            lk = getattr(sched, attr, None)
+            if lk is not None and hasattr(lk, "lock"):
+                self.watch_lock(lk, label)
+        for i, lk in enumerate(getattr(sched, "_add_locks", ()) or ()):
+            self.watch_lock(lk, f"scheduler.add_lock[{i}]")
+        for i, lk in enumerate(getattr(sched, "_lks", ()) or ()):
+            self.watch_lock(lk, f"scheduler.deque_lock[{i}]")
+
+    # ------------------------------------------------------------ plumbing
+    def _ctx(self) -> _Ctx:
+        c = getattr(self._tls, "ctx", None)
+        if c is None:
+            c = _Ctx(next(self._ids))
+            self._tls.ctx = c
+        return c
+
+    def _finding(self, kind: str, message: str, **details) -> None:
+        # callers hold self._lock
+        if len(self.findings) >= _MAX_FINDINGS:
+            self._dropped += 1
+            return
+        self.findings.append(Finding(kind, message, **details))
+        rt = self._rt
+        if rt is not None:
+            rt.tracer.event("san.violation", len(self.findings))
+
+    # ------------------------------------------------------------ lifecycle
+    def on_spawn(self, task, parent) -> None:
+        with self._lock:
+            ctx = self._ctx()
+            # domain ancestry (for the access-rights skip) follows
+            # task.parent only; the *clock* forks from whoever spawned us —
+            # a detached spawn from inside a running task still gets the
+            # spawner happens-before the child, without becoming its domain
+            dom = getattr(parent, "_san_node", None) if parent is not None \
+                else None
+            if dom is not None:
+                src_clock, src_id = dom.clock, dom.id
+            elif ctx.current is not None:
+                src_clock, src_id = ctx.current.clock, ctx.current.id
+            else:
+                src_clock, src_id = ctx.clock, ctx.id
+            node = _Node(next(self._ids), task, dom)
+            node.clock = dict(src_clock)
+            node.clock[node.id] = 1
+            src_clock[src_id] = src_clock.get(src_id, 0) + 1
+            task._san_node = node
+
+    def on_task_ready(self, task) -> None:
+        # Join per-address release clocks published by finalized
+        # predecessors. The locked system releases successors only at
+        # finalize, so this IS its happens-before edge. The wait-free
+        # system mostly synchronizes through ASM messages (on_asm_message),
+        # but a task that registers on an address AFTER the previous epoch
+        # fully finalized observes TASK_DONE in the lineage flags and gets
+        # satisfied with no message from the predecessor — that atomic
+        # flag read is a real synchronizing edge, so it must join here too.
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        with self._lock:
+            for acc in task.accesses:
+                rc = self._release_clocks.get(
+                    domain_key(task.parent, acc.address))
+                if rc:
+                    _join(node.clock, rc)
+
+    def on_asm_message(self, msg) -> None:
+        """Called by MailBox._deliver for every delivered message."""
+        src_acc = msg.from_
+        if src_acc is None or not (msg.flags_for_next & _HB_BITS):
+            return
+        src = getattr(src_acc.task, "_san_node", None)
+        dst = getattr(msg.to.task, "_san_node", None)
+        if src is None or dst is None or src is dst:
+            return
+        with self._lock:
+            _join(dst.clock, src.clock)
+
+    def on_hb_edge(self, src_task, dst_task) -> None:
+        """Explicit edge for dependency systems without messages."""
+        src = getattr(src_task, "_san_node", None)
+        dst = getattr(dst_task, "_san_node", None)
+        if src is None or dst is None or src is dst:
+            return
+        with self._lock:
+            _join(dst.clock, src.clock)
+
+    def on_start(self, task, wid: int, group_epoch=None) -> None:
+        """``group_epoch`` is the cancel epoch the runtime's own dequeue
+        check observed: a cancel landing after that check legitimately
+        overlaps the body. A runtime variant that skipped the check calls
+        without it, and the sanitizer reads the epoch itself."""
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        ctx = self._ctx()
+        with self._lock:
+            ctx.current = node
+            self._armed_lost_wake = False  # progress: wakes are flowing
+            if task.generation != node.gen:
+                self._finding(
+                    STALE_GENERATION,
+                    f"{node.label} executed at generation "
+                    f"{task.generation}, but was spawned at generation "
+                    f"{node.gen} — the pooled object was recycled while "
+                    "the logical task was still queued",
+                    task=node.label, spawn_gen=node.gen,
+                    run_gen=task.generation, worker=wid)
+                return  # access state would be the new occupant's
+            group = task.group
+            if group is not None:
+                epoch = group_epoch if group_epoch is not None \
+                    else group._cancel_epoch.load()
+                if epoch != task._cancel_epoch:
+                    self._finding(
+                        CANCEL_BODY_RAN,
+                        f"{node.label} body executed although its group "
+                        f"{group.name!r} was cancelled (spawn epoch "
+                        f"{task._cancel_epoch}, group epoch {epoch}) — "
+                        "cancelled members must be dropped at dequeue",
+                        task=node.label, group=group.name)
+            node.started = True
+            for acc in task.accesses:
+                self._check_access_start(node, acc)
+                self._active.setdefault(acc.address, {})[node] = (
+                    acc.atype, acc.red_op)
+
+    def on_end(self, task) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        ctx = self._ctx()
+        with self._lock:
+            if ctx.current is node:
+                ctx.current = None
+            if task.generation != node.gen:
+                return  # stale execution already reported at start
+            node.clock[node.id] = node.clock.get(node.id, 0) + 1
+            tick = node.clock[node.id]
+            for acc in task.accesses:
+                act = self._active.get(acc.address)
+                if act is not None:
+                    act.pop(node, None)
+                    if not act:
+                        del self._active[acc.address]
+                sh = self._shadow.get(acc.address)
+                if sh is None:
+                    sh = self._shadow[acc.address] = _Shadow()
+                if acc.atype == READ:
+                    sh.readers[node] = tick
+                elif acc.atype == REDUCTION:
+                    sh.reds[node] = (tick, acc.red_op)
+                else:  # WRITE / READWRITE / COMMUTATIVE
+                    sh.write = (node, tick)
+                    sh.readers.clear()
+                    sh.reds.clear()
+
+    def on_skip(self, task) -> None:
+        """Group-cancelled task dropped at dequeue: cancel() -> skip edge."""
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        with self._lock:
+            node.skipped = True
+            group = task.group
+            cc = getattr(group, "_san_cancel_clock", None)
+            if cc:
+                _join(node.clock, cc)
+
+    def on_finalize(self, task) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        with self._lock:
+            if node.finalized:
+                self._finding(
+                    DOUBLE_FINALIZE,
+                    f"{node.label} finalized twice — completion tokens "
+                    "were dropped more often than they were taken",
+                    task=node.label)
+                return
+            node.finalized = True
+            node.clock[node.id] = node.clock.get(node.id, 0) + 1
+            # publish this task's clock per address: successors that become
+            # ready after this finalize join it in on_task_ready
+            for acc in task.accesses:
+                key = domain_key(task.parent, acc.address)
+                rc = self._release_clocks.setdefault(key, {})
+                _join(rc, node.clock)
+            group = task.group
+            if group is not None:
+                gc = getattr(group, "_san_clock", None)
+                if gc is None:
+                    gc = {}
+                    group._san_clock = gc
+                _join(gc, node.clock)
+
+    def on_pool_release(self, task) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        with self._lock:
+            if node.released:
+                self._finding(
+                    RECYCLED_LIVE,
+                    f"{node.label} released to the pool twice",
+                    task=node.label)
+                return
+            if not node.finalized:
+                self._finding(
+                    RECYCLED_LIVE,
+                    f"{node.label} released to the pool before its "
+                    "completion tokens drained — a live logical task "
+                    "must never be recycled",
+                    task=node.label, started=node.started)
+            node.released = True
+
+    # ------------------------------------------------------------ waiting
+    def on_taskwait(self, task, gen: int) -> None:
+        node = getattr(task, "_san_node", None)
+        # gen-1 still denotes the same logical task: retire() bumps the
+        # generation at finalize, and a bare-Task taskwait may have stamped
+        # after that; only a reset() (new occupant) moves past gen-1
+        if node is None or node.gen not in (gen, gen - 1):
+            return
+        ctx = self._ctx()
+        with self._lock:
+            dst = ctx.current.clock if ctx.current is not None else ctx.clock
+            _join(dst, node.clock)
+
+    def on_group_wait(self, group) -> None:
+        gc = getattr(group, "_san_clock", None)
+        if not gc:
+            return
+        ctx = self._ctx()
+        with self._lock:
+            dst = ctx.current.clock if ctx.current is not None else ctx.clock
+            _join(dst, gc)
+
+    def on_group_cancel(self, group) -> None:
+        ctx = self._ctx()
+        with self._lock:
+            src = ctx.current.clock if ctx.current is not None else ctx.clock
+            group._san_cancel_clock = dict(src)
+
+    # ------------------------------------------------------------ parking
+    def on_enqueue_outcome(self, woken: bool, n_idle: int,
+                           pending: int) -> None:
+        with self._lock:
+            if woken:
+                self._armed_lost_wake = False
+            elif n_idle > 0:
+                # a task was made visible, workers are idle, and nobody was
+                # woken — benign only if one of the racing pollers takes it
+                self._armed_lost_wake = True
+
+    def on_wake_posted(self, wid) -> None:
+        ctx = self._ctx()
+        with self._lock:
+            src = ctx.current.clock if ctx.current is not None else ctx.clock
+            self._wake_clocks[wid] = dict(src)
+
+    def on_worker_woken(self, wid: int) -> None:
+        wc = self._wake_clocks.get(wid)
+        if wc is None:
+            return
+        ctx = self._ctx()
+        with self._lock:
+            _join(ctx.clock, wc)
+
+    def on_park_timeout(self, wid: int, pending: int) -> None:
+        if pending <= 0 or not self._armed_lost_wake:
+            return
+        with self._lock:
+            if not self._armed_lost_wake or self._lost_wake_reported:
+                return
+            self._lost_wake_reported = True
+            self._finding(
+                LOST_WAKE,
+                f"worker {wid}'s park timed out with {pending} task(s) "
+                "pending after an enqueue that woke nobody while workers "
+                "were idle — a wakeup was lost (the futex publish/re-poll "
+                "protocol forbids this)",
+                worker=wid, pending=pending)
+
+    # ------------------------------------------------------------ locks
+    def watch_lock(self, lock, name: Optional[str] = None) -> None:
+        """Enable acquire/release monitoring on one lock instance."""
+        lock._monitor = self
+        self._lock_names[id(lock)] = name or type(lock).__name__
+
+    def on_acquire(self, lock) -> None:
+        held = self._ctx().held
+        if held:
+            with self._lock:
+                for h in held:
+                    if h is not lock:
+                        self._add_lock_edge(h, lock)
+        held.append(lock)
+
+    def on_release(self, lock) -> None:
+        held = self._ctx().held
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] is lock:
+                del held[i]
+                return
+        with self._lock:
+            self._finding(
+                LOCK_UNHELD,
+                f"{self._lock_names.get(id(lock), 'lock')} released by a "
+                "thread that does not hold it",
+                lock=self._lock_names.get(id(lock)))
+
+    def _add_lock_edge(self, a, b) -> None:
+        # callers hold self._lock
+        succs = self._lock_edges.setdefault(id(a), set())
+        if id(b) in succs:
+            return
+        succs.add(id(b))
+        # new edge a->b: a path b ->* a now closes a cycle
+        stack, seen = [id(b)], set()
+        while stack:
+            n = stack.pop()
+            if n == id(a):
+                key = frozenset((id(a), id(b)))
+                if key in self._lock_cycles_seen:
+                    return
+                self._lock_cycles_seen.add(key)
+                na = self._lock_names.get(id(a), "lock-a")
+                nb = self._lock_names.get(id(b), "lock-b")
+                self._finding(
+                    LOCK_ORDER,
+                    f"lock-order inversion: {na} -> {nb} acquired here, "
+                    f"but {nb} ->* {na} was observed earlier — the "
+                    "acquisition-order graph has a cycle (deadlock "
+                    "candidate)",
+                    locks=sorted((na, nb)))
+                return
+            if n in seen:
+                continue
+            seen.add(n)
+            stack.extend(self._lock_edges.get(n, ()))
+
+    # ------------------------------------------------------------ checks
+    def _check_access_start(self, node: _Node, acc) -> None:
+        # callers hold self._lock
+        addr = acc.address
+        clock = node.clock
+
+        def hb(other: _Node, tick: int) -> bool:
+            return clock.get(other.id, 0) >= tick
+
+        act = self._active.get(addr)
+        if act:
+            for other, (otype, oop) in act.items():
+                if other is node or _related(node, other):
+                    continue
+                if acc.atype == READ and otype == READ:
+                    continue
+                if (acc.atype == REDUCTION and otype == REDUCTION
+                        and acc.red_op == oop):
+                    continue
+                if acc.atype == COMMUTATIVE and otype == COMMUTATIVE:
+                    self._finding(
+                        COMMUTATIVE_OVERLAP,
+                        f"commutative accesses to {addr!r} overlap: "
+                        f"{node.label} started while {other.label} is "
+                        "still running — commutative means order-free, "
+                        "not concurrent",
+                        address=repr(addr), tasks=[node.label, other.label])
+                else:
+                    kind = RACE_RW if READ in (acc.atype, otype) else RACE_WW
+                    self._finding(
+                        kind,
+                        f"conflicting accesses to {addr!r} overlap: "
+                        f"{node.label} started while {other.label} is "
+                        "still running with no happens-before edge",
+                        address=repr(addr), tasks=[node.label, other.label])
+        sh = self._shadow.get(addr)
+        if sh is None:
+            return
+        w = sh.write
+        if w is not None and w[0] is not node \
+                and not _related(node, w[0]) and not hb(*w):
+            kind = RACE_RW if acc.atype == READ else RACE_WW
+            self._finding(
+                kind,
+                f"{node.label} accesses {addr!r} with no happens-before "
+                f"edge from the last writer {w[0].label}",
+                address=repr(addr), tasks=[node.label, w[0].label])
+        if acc.atype != READ:
+            for other, tick in sh.readers.items():
+                if other is node or _related(node, other):
+                    continue
+                if not hb(other, tick):
+                    self._finding(
+                        RACE_RW,
+                        f"{node.label} writes {addr!r} with no "
+                        f"happens-before edge from reader {other.label}",
+                        address=repr(addr),
+                        tasks=[node.label, other.label])
+        for other, (tick, oop) in sh.reds.items():
+            if other is node or _related(node, other):
+                continue
+            if acc.atype == REDUCTION and acc.red_op == oop:
+                continue  # same-op reductions may interleave freely
+            if not hb(other, tick):
+                self._finding(
+                    RACE_RED,
+                    f"{node.label} accesses {addr!r} with no "
+                    f"happens-before edge from reduction({oop}) "
+                    f"{other.label}",
+                    address=repr(addr), tasks=[node.label, other.label])
+
+    # ------------------------------------------------------------ report
+    def summary(self) -> dict:
+        with self._lock:
+            by_kind: dict = {}
+            for f in self.findings:
+                by_kind[f.kind] = by_kind.get(f.kind, 0) + 1
+            return {"findings": len(self.findings), "dropped": self._dropped,
+                    "by_kind": by_kind}
+
+    def kinds(self) -> set:
+        with self._lock:
+            return {f.kind for f in self.findings}
+
+    def to_json(self) -> list:
+        with self._lock:
+            return [f.to_dict() for f in self.findings]
+
+    def flush_report(self, path: Optional[str] = None) -> Optional[str]:
+        """Append a JSON line with the run summary + findings. Path from the
+        argument or the REPRO_SANITIZE_REPORT env var (CI artifact)."""
+        path = path or os.environ.get("REPRO_SANITIZE_REPORT")
+        if not path:
+            return None
+        rec = {"summary": self.summary(), "findings": self.to_json()}
+        with open(path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        return path
+
+    def check(self) -> None:
+        """Raise TaskSanError if any findings were collected."""
+        with self._lock:
+            if self.findings:
+                raise TaskSanError(list(self.findings))

@@ -120,7 +120,7 @@ class MailBox:
     objects are amortized across all tasks of a lineage instead of being
     allocated per delivery."""
 
-    __slots__ = ("_q", "on_ready", "_free")
+    __slots__ = ("_q", "on_ready", "_free", "san")
 
     _MAX_FREE = 64  # deeper backlogs fall back to the allocator
 
@@ -128,6 +128,7 @@ class MailBox:
         self._q: deque = deque()
         self.on_ready = on_ready  # callback(access) when access satisfied
         self._free: list = []
+        self.san = None  # tasksan hook (TaskRuntime._mailbox tags leases)
 
     def post(self, msg: DataAccessMessage):
         self._q.append(msg)
@@ -160,6 +161,11 @@ class MailBox:
 
     # ------------------------------------------------------------------
     def _deliver(self, msg: DataAccessMessage):
+        san = self.san
+        if san is not None:
+            # happens-before join must precede the transition that may make
+            # the receiver's task ready (and runnable on another worker)
+            san.on_asm_message(msg)
         a = msg.to
         old = a.flags.fetch_or(msg.flags_for_next)
         new = old | msg.flags_for_next

@@ -45,7 +45,22 @@ EVENTS = {
     "task.cancel": 20,      # group-cancelled task dropped (spawn or dequeue)
     "group.cancel": 21,     # TaskGroup.cancel() (arg: outstanding count)
     "sched.add_fallback": 22,  # producer blocked as DTLock ticket waiter
+    "san.violation": 23,    # tasksan finding recorded (arg: running total)
 }
+
+
+def register_event(name: str) -> int:
+    """Register a new event name in the catalog and return its id.
+
+    Every ``Tracer.event`` name must come from the catalog — ad-hoc strings
+    silently mapped to id 0, which made traces unparseable and let call
+    sites drift. Extensions (experiments, downstream subsystems) register
+    here once at import time instead of inventing names inline."""
+    eid = EVENTS.get(name)
+    if eid is None:
+        eid = max(EVENTS.values(), default=0) + 1
+        EVENTS[name] = eid
+    return eid
 
 
 class _WorkerBuffer:
@@ -87,7 +102,14 @@ class Tracer:
     def event(self, name: str, arg: int = 0):
         if not self.enabled:
             return
-        self._buf().append((time.monotonic_ns(), EVENTS.get(name, 0), int(arg)))
+        eid = EVENTS.get(name)
+        if eid is None:
+            # an unregistered name would serialize as id 0 and be
+            # unrecoverable from the binary stream; fail at the call site
+            raise ValueError(
+                f"unregistered trace event {name!r}: add it to "
+                "repro.core.instrument.EVENTS or call register_event()")
+        self._buf().append((time.monotonic_ns(), eid, int(arg)))
 
     # ---------------------------------------------------------------- dump
     def flush(self, out_dir: Optional[str] = None) -> Optional[str]:

@@ -21,7 +21,50 @@ def spin():
     time.sleep(0)  # yield GIL (pause-instruction analogue)
 
 
-class MutexLock:
+def _backoff(spins: int, ahead: int = 1):
+    """Bounded spin, then escalating micro-sleeps — proportional to queue
+    position (``ahead`` = tickets between us and the one being served).
+
+    Pure ``sleep(0)`` spinning assumes a free core; on an oversubscribed
+    (or single-core) box the OS can keep re-running a yielding waiter for
+    whole timeslices while the thread that would publish the grant waits —
+    FIFO ticket handoffs then degrade to multiple ms each and the whole
+    runtime convoys (bistably: some runs land 500x slower than others).
+    Backoff caps that, but must be *proportional* for a FIFO lock: a
+    ticket lock hands the lock to one specific waiter, so if that waiter
+    is inside a real sleep (stretched to ~1ms by OS timer slack) the lock
+    sits granted-but-unclaimed until it wakes. Hence the next-in-line
+    waiter only ever yields; only threads further back take real sleeps."""
+    if ahead <= 1 or spins <= 8:
+        time.sleep(0)
+    else:
+        time.sleep(min(spins * 2, 200) * 1e-6)
+
+
+class _Monitored:
+    """Optional acquire/release observation (tasksan's lock-order graph).
+
+    ``_monitor`` is a class attribute (None): with the sanitizer off every
+    hook site is one attribute load + is-None test. ``TaskSanitizer.
+    watch_lock`` overrides it per *instance*, so only watched locks pay for
+    the callbacks. The lock()/unlock() fast paths inline the test instead
+    of calling these helpers — a method call per acquire would be the
+    dominant disabled-sanitizer cost."""
+
+    _monitor = None
+
+    def _acquired(self):
+        m = self._monitor
+        if m is not None:
+            m.on_acquire(self)
+
+    def _releasing(self):
+        m = self._monitor
+        if m is not None:
+            m.on_release(self)
+
+
+class MutexLock(_Monitored):
     """Baseline: plain mutex (pthread-style)."""
 
     def __init__(self, size: int = 64):
@@ -29,15 +72,24 @@ class MutexLock:
 
     def lock(self):
         self._lk.acquire()
+        m = self._monitor
+        if m is not None:
+            m.on_acquire(self)
 
     def unlock(self):
+        m = self._monitor
+        if m is not None:
+            m.on_release(self)
         self._lk.release()
 
     def try_lock(self) -> bool:
-        return self._lk.acquire(blocking=False)
+        if self._lk.acquire(blocking=False):
+            self._acquired()
+            return True
+        return False
 
 
-class TicketLock:
+class TicketLock(_Monitored):
     """Classic ticket lock [Reed & Kanodia 1979]: fair FIFO, single word
     busy-wait => heavy cache-line contention at scale (paper §3.2)."""
 
@@ -47,10 +99,21 @@ class TicketLock:
 
     def lock(self):
         t = self._next.fetch_add(1)
-        while self._serving.load() != t:
-            spin()
+        spins = 0
+        while True:
+            s = self._serving.load()
+            if s == t:
+                break
+            spins += 1
+            _backoff(spins, t - s)
+        m = self._monitor
+        if m is not None:
+            m.on_acquire(self)
 
     def unlock(self):
+        m = self._monitor
+        if m is not None:
+            m.on_release(self)
         self._serving.store(self._serving.load() + 1)
 
     def try_lock(self) -> bool:
@@ -58,11 +121,12 @@ class TicketLock:
         if self._next.load() != t:
             return False
         if self._next.compare_exchange(t, t + 1):
+            self._acquired()
             return True
         return False
 
 
-class PTLock:
+class PTLock(_Monitored):
     """Partitioned Ticket Lock [Dice 2011] — paper Listing 3.
 
     Each waiter spins on its own _waitq slot (distinct cache line in the
@@ -80,16 +144,32 @@ class PTLock:
 
     def _wait_turn(self, ticket: int):
         slot = self._waitq[ticket % self.size]
+        spins = 0
         while slot.load() < ticket:
-            spin()
+            spins += 1
+            # _tail (next ticket to grant) is owner-written; the racy read
+            # is only a position hint — a stale value costs one extra yield
+            _backoff(spins, ticket - self._tail + 1)
 
     def lock(self):
         self._wait_turn(self._get_ticket())
+        m = self._monitor
+        if m is not None:
+            m.on_acquire(self)
 
-    def unlock(self):
+    def _advance(self):
+        """Publish the next ticket (the bare tail bump, unmonitored): used
+        both by ``unlock`` and by DTLock's owner serving a waiter — the
+        latter wakes the waiter *without* the owner giving up ownership."""
         idx = self._tail % self.size
         self._waitq[idx].store(self._tail)
         self._tail += 1
+
+    def unlock(self):
+        m = self._monitor
+        if m is not None:
+            m.on_release(self)
+        self._advance()
 
     def try_lock(self) -> bool:
         # lock is free iff _head == _tail - 1 and no waiter holds a ticket
@@ -99,6 +179,7 @@ class PTLock:
         if not self._head.compare_exchange(expected, expected + 1):
             return False
         # our ticket is `expected`; it is already released by construction
+        self._acquired()
         return True
 
 
@@ -141,6 +222,7 @@ class DTLock(PTLock, Generic[T]):
         slot = self._readyq[id_]
         if slot.ticket != ticket:
             # woken as the new lock owner (not served)
+            self._acquired()
             return True, default
         return False, slot.item
 
@@ -157,7 +239,9 @@ class DTLock(PTLock, Generic[T]):
         slot.ticket = self._tail
 
     def pop_front(self):
-        self.unlock()
+        # wakes the served waiter; the caller REMAINS the lock owner, so
+        # this must not run the release hook (see PTLock._advance)
+        self._advance()
 
 
 LOCK_KINDS = {

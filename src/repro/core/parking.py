@@ -59,6 +59,7 @@ class ParkingLot:
     """Per-worker parking slots with single-wake producers."""
 
     name = "slots"
+    san = None  # tasksan hook; instance attr when installed
 
     def __init__(self, n_workers: int, n_numa: int = 1):
         n_numa = max(1, n_numa)
@@ -160,6 +161,11 @@ class ParkingLot:
             s.pending_wake = True
             s.cond.notify()
         self.wakes.fetch_add(1)
+        san = self.san
+        if san is not None:
+            # the posted wake carries the producer's clock to the woken
+            # worker (a real happens-before edge: seq bump under s.cond)
+            san.on_wake_posted(s.wid)
         return True
 
     def wake_all(self) -> None:
@@ -187,6 +193,7 @@ class EventcountParking:
     """
 
     name = "eventcount"
+    san = None  # tasksan hook (global eventcount has no per-wid wake edge)
 
     def __init__(self, n_workers: int, n_numa: int = 1):
         self._cond = threading.Condition(threading.Lock())

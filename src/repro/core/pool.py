@@ -79,6 +79,7 @@ class TaskPool:
         self.enabled = enabled
         self._pool = ObjectPool(Task, reset=lambda t: t.reset())
         self._outstanding = AtomicU64(0)
+        self.san = None  # tasksan hook (install() sets it)
 
     def acquire(self) -> Task:
         if not self.enabled:
@@ -95,6 +96,9 @@ class TaskPool:
         spawn would read as a permanent leak."""
         if not self.enabled:
             return
+        san = self.san
+        if san is not None:
+            san.on_pool_release(task)
         self._outstanding.fetch_add(-1)
         if task.pooled:
             self._pool.release(task)

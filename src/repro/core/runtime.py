@@ -90,6 +90,7 @@ decode chain on the first error and for ``stop(drain=False)``.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 import weakref
@@ -189,6 +190,11 @@ class TaskGroup:
         if not self._cancel_once.compare_exchange(0, 1):
             return
         self._cancelled = True
+        san = self._rt.san
+        if san is not None:
+            # record the canceller's clock BEFORE the epoch bump publishes
+            # the cancel: every member skipped at dequeue joins it
+            san.on_group_cancel(self)
         self._cancel_epoch.fetch_add(1)
         self._rt.tracer.event("group.cancel", self._outstanding.load())
         cb = self.on_cancel
@@ -229,16 +235,24 @@ class TaskGroup:
                     return False
                 if raise_errors:
                     self.raise_errors()
+                self._san_joined()
                 return True
             if not self._idle.wait(budget):
                 return False
             if self._outstanding.load() == 0:
                 if raise_errors:
                     self.raise_errors()
+                self._san_joined()
                 return True
             # the event was re-armed by a concurrent spawn between set() and
             # clear(); yield and re-wait on the (soon cleared) event
             time.sleep(0)
+
+    def _san_joined(self):
+        """Successful wait: every finished member happens-before the waiter."""
+        san = self._rt.san
+        if san is not None:
+            san.on_group_wait(self)
 
     def raise_errors(self):
         with self._errors_lock:
@@ -293,7 +307,8 @@ class TaskRuntime:
                  deps: str = "waitfree", use_pool: bool = True,
                  policy: str = "fifo", n_numa: int = 1,
                  tracer: Optional[Tracer] = None,
-                 spsc_capacity: int = 256, parking: str = "slots"):
+                 spsc_capacity: int = 256, parking: str = "slots",
+                 sanitize: Union[bool, str, None] = None):
         self.n_workers = n_workers
         self.tracer = tracer or Tracer(enabled=False)
         self.pool = TaskPool(enabled=use_pool)
@@ -340,6 +355,20 @@ class TaskRuntime:
         # plain, racy updates; every consumer clamps to [MIN, MAX])
         self._ewma_arrival_s = 0.005
         self._last_arrival_ns = 0
+        # tasksan (repro.analyze.tsan): sanitize=True raises TaskSanError at
+        # shutdown, "report" only collects; None defers to REPRO_SANITIZE
+        # ("1" -> True, "report" -> report mode). Off (None on every hook
+        # site) costs one attribute check per hook.
+        if sanitize is None:
+            env = os.environ.get("REPRO_SANITIZE", "")
+            sanitize = "report" if env == "report" \
+                else env not in ("", "0", "false")
+        self.san = None
+        if sanitize:
+            from repro.analyze.tsan import TaskSanitizer
+            self.san = TaskSanitizer(
+                raise_on_shutdown=(sanitize != "report"))
+            self.san.install(self)
 
     # ---------------------------------------------------------------- infra
     def _mailbox(self) -> MailBox:
@@ -351,6 +380,7 @@ class TaskRuntime:
         lease = getattr(self._mailboxes, "lease", None)
         if lease is None:
             lease = _MailboxLease(self._mb_pool)
+            lease.mb.san = self.san  # boxes circulate within one runtime
             self._mailboxes.lease = lease
         return lease.mb
 
@@ -380,10 +410,15 @@ class TaskRuntime:
         self._started = False
         if self._quiescent.is_set():
             self.collect()
+        san = self.san
+        if san is not None:
+            san.flush_report()  # CI artifact (REPRO_SANITIZE_REPORT)
         with self._errors_lock:
             errs, self._errors = self._errors, []
         if errs:
             raise _attach_siblings(errs)
+        if san is not None and san.raise_on_shutdown:
+            san.check()
 
     def collect(self) -> int:
         """Prune dependency-system lineage bookkeeping. Safe only while the
@@ -446,6 +481,11 @@ class TaskRuntime:
                 if self._live.load() > 0:
                     self._quiescent.clear()
         self.tracer.event("task.create", task.task_id)
+        san = self.san
+        if san is not None:
+            # before registration: once published the task may run, finish
+            # and be recycled on another worker before spawn returns
+            san.on_spawn(task, parent)
         self.deps.register_task(task, self._mailbox())
         return ref if handle else task
 
@@ -455,6 +495,11 @@ class TaskRuntime:
 
     def _task_ready(self, task: Task):
         task.ready_ns = time.monotonic_ns()
+        san = self.san
+        if san is not None:
+            # locked-deps release joins must land before a worker can pick
+            # the task up (it becomes runnable at add_ready_task below)
+            san.on_task_ready(task)
         self.tracer.event("task.ready", task.task_id)
         self._observe_arrival(task.ready_ns)
         if self.scheduler_kind == "work-stealing":
@@ -478,6 +523,11 @@ class TaskRuntime:
     def _finalize(self, task: Task) -> Optional[Task]:
         """All completion tokens dropped: the task and its whole subtree are
         done. Returns the parent (whose child token the caller must drop)."""
+        san = self.san
+        if san is not None:
+            # before the (deferred) unregister: locked-mode release clocks
+            # must be published before successors can become ready
+            san.on_finalize(task)
         if self._defer_unregister:
             # locked deps: conservative nesting — successors become ready
             # only once the full subtree completed
@@ -499,20 +549,32 @@ class TaskRuntime:
         return parent
 
     def _run_task(self, task: Task, wid: int):
+        san = self.san
         group = task.group
-        if group is not None and \
-                group._cancel_epoch.load() != task._cancel_epoch:
+        observed_epoch = None if group is None \
+            else group._cancel_epoch.load()
+        if group is not None and observed_epoch != task._cancel_epoch:
             # dropped at dequeue by the cancel token: skip the body but run
             # the full completion path below, so successors, taskwait and
             # pool recycling behave as if the body returned None
             self.tracer.event("task.cancel", task.task_id)
+            if san is not None:
+                san.on_skip(task)
             task.skip()
         else:
             _current_task.t = task
             task.start_ns = time.monotonic_ns()
             self.tracer.event("task.start", task.task_id)
+            if san is not None:
+                # pass the epoch THIS dequeue decided on: a cancel landing
+                # after the check above legitimately overlaps the body
+                san.on_start(task, wid, group_epoch=observed_epoch)
             task.run()
             task.end_ns = time.monotonic_ns()
+            if san is not None:
+                # before unregister: successors join this task's clock via
+                # the completion messages, which need the end tick in place
+                san.on_end(task)
             self.tracer.event("task.end", task.task_id)
             _current_task.t = None
         if not self._defer_unregister:
@@ -553,9 +615,14 @@ class TaskRuntime:
         one parked worker, preferring the task's NUMA node (or, for
         work-stealing, the worker whose deque received it)."""
         prefer_numa = numa_hint if self._n_numa > 1 else None
-        if self._parking.wake_one(prefer_numa=prefer_numa,
-                                  prefer_wid=worker_id):
+        woken = self._parking.wake_one(prefer_numa=prefer_numa,
+                                       prefer_wid=worker_id)
+        if woken:
             self.tracer.event("worker.wake", numa_hint)
+        san = self.san
+        if san is not None:
+            san.on_enqueue_outcome(woken, self._parking.n_idle,
+                                   self.scheduler.pending())
 
     def _worker(self, wid: int):
         _current_task.wid = wid
@@ -593,12 +660,17 @@ class TaskRuntime:
                 parking.cancel_poll(wid)
                 break
             self.tracer.event("worker.park", wid)
+            san = self.san
             if parking.park(wid, token, self._park_timeout(n_timeouts)):
                 n_timeouts = 0
                 spins = 0  # woken: poll, then spin briefly before re-park
+                if san is not None:
+                    san.on_worker_woken(wid)
             else:
                 n_timeouts += 1
                 spins = _PARK_AFTER_SPINS  # timed out: skip the spin phase
+                if san is not None:
+                    san.on_park_timeout(wid, self.scheduler.pending())
 
     # ---------------------------------------------------------------- sync
     def taskwait(self, task: Union[Task, TaskRef],
@@ -614,7 +686,14 @@ class TaskRuntime:
             t, gen = task.task, task.generation
         else:
             t, gen = task, task.generation
+        ok = self._taskwait(t, gen, timeout)
+        san = self.san
+        if ok and san is not None:
+            san.on_taskwait(t, gen)  # awaited task happens-before waiter
+        return ok
 
+    def _taskwait(self, t: Task, gen: int,
+                  timeout: Optional[float]) -> bool:
         def finished() -> bool:
             return t.generation != gen or t.state == DONE
 

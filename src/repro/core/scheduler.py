@@ -124,6 +124,8 @@ class SyncScheduler:
                 # waiter (FIFO => guaranteed ownership) and direct-serve
                 if self._instr:
                     self._instr.event("sched.add_fallback", numa_hint)
+                # released by _insert_direct's own finally (shared with the
+                # try_lock path above):  lint: ok(lock-try-finally)
                 self._lock.lock()
                 self._insert_direct(task)
                 return
@@ -243,8 +245,10 @@ class WorkStealingScheduler:
     def get_ready_task(self, worker_id: int):
         i = worker_id % self.n
         self._lks[i].lock()
-        task = self._qs[i].pop() if self._qs[i] else None  # LIFO own queue
-        self._lks[i].unlock()
+        try:  # a poisoned deque op must not leak the owner's queue lock
+            task = self._qs[i].pop() if self._qs[i] else None  # LIFO own q
+        finally:
+            self._lks[i].unlock()
         if task is not None:
             return task
         # steal FIFO from a random victim (per-worker RNG)
@@ -254,8 +258,10 @@ class WorkStealingScheduler:
             if v == i:
                 continue
             self._lks[v].lock()
-            task = self._qs[v].popleft() if self._qs[v] else None
-            self._lks[v].unlock()
+            try:
+                task = self._qs[v].popleft() if self._qs[v] else None
+            finally:
+                self._lks[v].unlock()
             if task is not None:
                 return task
         return None

@@ -38,7 +38,7 @@ class Task:
                  "affinity", "on_ready", "_completion", "_done_event",
                  "exception", "created_ns", "ready_ns", "start_ns", "end_ns",
                  "pooled", "generation", "group", "_lineage_keys",
-                 "_cancel_epoch")
+                 "_cancel_epoch", "_san_node")
 
     def __init__(self):
         self.generation = 0
@@ -47,6 +47,9 @@ class Task:
     def reset(self):
         self.task_id = next(_task_ids)
         self.generation += 1  # recycling epoch: never reset, only advances
+        # _san_node (tasksan bookkeeping) deliberately survives reset: a
+        # stale dequeue of the PREVIOUS logical task must still find the
+        # node it was spawned as; on_spawn overwrites it for the new one
         self.fn: Optional[Callable] = None
         self.args = ()
         self.kwargs = {}

@@ -1,0 +1,423 @@
+"""tasksan: seeded concurrency bugs the sanitizer must catch, clean runs it
+must stay silent on, and the static lint rule corpus.
+
+Each seeded test deliberately breaks one runtime protocol in a subclass /
+injected component copy (never the real code path) and asserts the exact
+finding kind. Clean tests run representative workloads — dependency chains,
+reductions, nested domains, cancellation, parking churn — under
+sanitize=True and assert zero findings (the false-positive gauntlet).
+"""
+import os
+import textwrap
+import threading
+import time
+
+import pytest
+
+from repro.analyze import TaskSanError, TaskSanitizer, run_lint
+from repro.analyze import tsan as tsan_mod
+from repro.core.asm import READ_SAT, WRITE_SAT, WaitFreeDependencySystem
+from repro.core.instrument import EVENTS, Tracer, register_event
+from repro.core.locks import MutexLock
+from repro.core.parking import ParkingLot
+from repro.core.runtime import TaskRuntime
+
+
+# --------------------------------------------------------------- bug seeds
+class NoEdgeDeps(WaitFreeDependencySystem):
+    """BROKEN ON PURPOSE: registers every access as a fresh root lineage —
+    no successor links, so no ordering (and no HB edges) between tasks."""
+
+    def register_task(self, task, mailbox):
+        for acc in task.accesses:
+            mailbox.send(acc, READ_SAT | WRITE_SAT, None, 0)
+        mailbox.deliver_all()
+        task.registration_done()
+
+    def unregister_task(self, task, mailbox):
+        pass  # nothing was linked, nothing to notify
+
+
+class DropWakes(ParkingLot):
+    """BROKEN ON PURPOSE: every producer wake is silently dropped."""
+
+    def wake_one(self, prefer_numa=None, prefer_wid=None):
+        return False
+
+
+def _broken_deps_runtime(n_workers):
+    rt = TaskRuntime(n_workers=n_workers, sanitize="report")
+    rt.deps = NoEdgeDeps()
+    return rt
+
+
+def test_catches_missed_hb_edge():
+    # two RW tasks on one address with the dependency edges removed: the
+    # second starts with no happens-before path from the first's write
+    rt = _broken_deps_runtime(n_workers=1)
+    # spawn before start: both tasks become ready before either finalizes,
+    # so the second can't inherit the first's clock via a release join
+    rt.spawn(lambda: None, rw=["x"], name="w1")
+    rt.spawn(lambda: None, rw=["x"], name="w2")
+    with rt:
+        assert rt.barrier(timeout=30)
+    assert tsan_mod.RACE_WW in rt.san.kinds()
+
+
+def test_catches_missed_hb_edge_read_write():
+    rt = _broken_deps_runtime(n_workers=1)
+    rt.spawn(lambda: None, rw=["x"], name="w")
+    rt.spawn(lambda: None, reads=["x"], name="r")
+    with rt:
+        assert rt.barrier(timeout=30)
+    assert tsan_mod.RACE_RW in rt.san.kinds()
+
+
+def test_catches_commutative_overlap():
+    # commutative means mutually exclusive with free order; with the edges
+    # removed both bodies rendezvous inside the critical address
+    rt = _broken_deps_runtime(n_workers=2)
+    gate = threading.Barrier(2)
+    with rt:
+        for name in ("c1", "c2"):
+            rt.spawn(lambda: gate.wait(timeout=10), commutative=["acc"],
+                     name=name)
+        assert rt.barrier(timeout=30)
+    assert tsan_mod.COMMUTATIVE_OVERLAP in rt.san.kinds()
+
+
+def test_catches_lost_wake():
+    rt = TaskRuntime(n_workers=1, sanitize="report")
+    broken = DropWakes(rt.n_workers)
+    broken.san = rt.san
+    rt._parking = broken
+    with rt:
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            rt.spawn(lambda: None, name="work")
+            time.sleep(0.3)  # let the worker park before the next spawn
+            if tsan_mod.LOST_WAKE in rt.san.kinds():
+                break
+        assert rt.barrier(timeout=30)
+    assert tsan_mod.LOST_WAKE in rt.san.kinds()
+
+
+def test_catches_stale_generation_use():
+    # the queued Task object is recycled into a new logical task before a
+    # worker dequeues it — the signature use-after-recycle bug
+    rt = TaskRuntime(n_workers=1, sanitize="report")
+    t = rt.spawn(lambda: None, name="victim")  # queued: no workers yet
+    t.reset()
+    t.init(lambda: None, name="occupant")
+    rt.start()
+    assert rt.barrier(timeout=30)
+    rt.shutdown()
+    assert tsan_mod.STALE_GENERATION in rt.san.kinds()
+
+
+def test_catches_live_task_recycled():
+    rt = TaskRuntime(n_workers=0, sanitize="report")
+    t = rt.spawn(lambda: None, name="live")  # no workers: never finishes
+    rt.pool.release(t)  # BROKEN ON PURPOSE: tokens never drained
+    assert tsan_mod.RECYCLED_LIVE in rt.san.kinds()
+
+
+def test_catches_cancelled_body_ran():
+    class NoCancelCheckRuntime(TaskRuntime):
+        """BROKEN ON PURPOSE: workers never check the cancel epoch."""
+
+        def _run_task(self, task, wid):
+            san = self.san
+            if san is not None:
+                san.on_start(task, wid)  # no dequeue check to report
+            task.run()
+            if san is not None:
+                san.on_end(task)
+            if not self._defer_unregister:
+                self.deps.unregister_task(task, self._mailbox())
+            self._drop_token(task)
+
+    rt = NoCancelCheckRuntime(n_workers=1, sanitize="report")
+    group = rt.task_group("g")
+    ran = []
+    group.spawn(lambda: ran.append(1), name="member")  # queued
+    group.cancel()  # strictly before any worker exists
+    rt.start()
+    assert rt.barrier(timeout=30)
+    rt.shutdown()
+    assert ran  # the broken runtime really did run the cancelled body
+    assert tsan_mod.CANCEL_BODY_RAN in rt.san.kinds()
+
+
+def test_catches_lock_order_inversion():
+    san = TaskSanitizer(raise_on_shutdown=False)
+    a, b = MutexLock(), MutexLock()
+    san.watch_lock(a, "A")
+    san.watch_lock(b, "B")
+    a.lock(); b.lock(); b.unlock(); a.unlock()  # order A -> B
+    b.lock(); a.lock(); a.unlock(); b.unlock()  # order B -> A: cycle
+    assert tsan_mod.LOCK_ORDER in san.kinds()
+
+
+def test_lock_release_by_non_holder():
+    san = TaskSanitizer(raise_on_shutdown=False)
+    lk = MutexLock()
+    san.watch_lock(lk, "L")
+    lk.lock()
+    done = threading.Event()
+
+    def other():
+        lk.unlock()  # BROKEN ON PURPOSE: this thread never acquired it
+        done.set()
+
+    threading.Thread(target=other, daemon=True).start()
+    assert done.wait(10)
+    assert tsan_mod.LOCK_UNHELD in san.kinds()
+
+
+def test_sanitize_true_raises_at_shutdown():
+    rt = _broken_deps_runtime(n_workers=1)
+    rt.san.raise_on_shutdown = True
+    rt.start()
+    rt.spawn(lambda: None, rw=["x"], name="w1")
+    rt.spawn(lambda: None, rw=["x"], name="w2")
+    assert rt.barrier(timeout=30)
+    with pytest.raises(TaskSanError) as ei:
+        rt.shutdown()
+    assert ei.value.findings
+
+
+def test_report_artifact_written(tmp_path):
+    path = str(tmp_path / "san.jsonl")
+    rt = _broken_deps_runtime(n_workers=1)
+    with rt:
+        rt.spawn(lambda: None, rw=["x"], name="w1")
+        rt.spawn(lambda: None, rw=["x"], name="w2")
+        assert rt.barrier(timeout=30)
+    out = rt.san.flush_report(path)
+    assert out == path
+    import json
+    rec = json.loads(open(path).read().splitlines()[0])
+    assert rec["summary"]["findings"] >= 1
+    assert any(f["kind"] == tsan_mod.RACE_WW for f in rec["findings"])
+
+
+# ------------------------------------------------------------- clean runs
+def _assert_clean(rt):
+    assert rt.san.summary()["findings"] == 0, rt.san.to_json()
+
+
+@pytest.mark.parametrize("deps", ["waitfree", "locked"])
+def test_clean_dependency_chains(deps):
+    rt = TaskRuntime(n_workers=3, deps=deps, sanitize=True)
+    with rt:
+        acc = []
+        for i in range(60):
+            rt.spawn(lambda i=i: acc.append(i), rw=["x"], name=f"w{i}")
+        for i in range(30):
+            rt.spawn(lambda: len(acc), reads=["x"], name=f"r{i}")
+        for i in range(12):
+            rt.spawn(lambda: None, reductions=[("s", "+")], name=f"red{i}")
+        rt.spawn(lambda: None, reads=["s"], name="after-red")
+        assert rt.barrier(timeout=60)
+    assert len(acc) == 60
+    _assert_clean(rt)
+
+
+def test_clean_nested_domains():
+    rt = TaskRuntime(n_workers=3, sanitize=True)
+    with rt:
+        def parent_body(i):
+            for tag in "ab":
+                rt.spawn(lambda: None, rw=[("blk", i)], name=f"c{i}{tag}")
+        for i in range(10):
+            rt.spawn(parent_body, (i,), rw=[("blk", i)], name=f"p{i}")
+        assert rt.barrier(timeout=60)
+    _assert_clean(rt)
+
+
+def test_clean_cancellation():
+    rt = TaskRuntime(n_workers=3, sanitize=True)
+    with rt:
+        g = rt.task_group("g")
+        gate = threading.Event()
+        g.spawn(lambda: gate.wait(10), name="blocker")
+        for i in range(40):
+            g.spawn(lambda: None, name=f"m{i}", rw=["y"])
+        g.cancel()
+        gate.set()
+        assert g.wait(timeout=60, raise_errors=False)
+        assert rt.barrier(timeout=60)
+    _assert_clean(rt)
+
+
+def test_clean_parking_churn():
+    # bursts separated by idle gaps: workers park and wake repeatedly
+    rt = TaskRuntime(n_workers=4, sanitize=True)
+    with rt:
+        for _ in range(6):
+            for i in range(25):
+                rt.spawn(lambda: None, name=f"b{i}")
+            assert rt.barrier(timeout=60)
+            time.sleep(0.05)
+    _assert_clean(rt)
+
+
+def test_clean_taskwait_and_groups():
+    rt = TaskRuntime(n_workers=2, sanitize=True)
+    with rt:
+        t = rt.spawn(lambda: 42, retain=True, rw=["z"], name="retained")
+        assert rt.taskwait(t, timeout=30)
+        assert t.result == 42
+        # the waiter may now touch 'z' itself: taskwait is the HB edge
+        rt.spawn(lambda: None, rw=["z"], name="next")
+        h = rt.spawn(lambda: 7, handle=True, rw=["z"], name="handled")
+        assert rt.taskwait(h, timeout=30)
+        with rt.task_group("g2") as g:
+            for i in range(20):
+                g.spawn(lambda: None, rw=["w"], name=f"g{i}")
+        assert rt.barrier(timeout=60)
+    _assert_clean(rt)
+
+
+def test_env_opt_in(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "report")
+    rt = TaskRuntime(n_workers=1)
+    assert rt.san is not None and not rt.san.raise_on_shutdown
+    rt.shutdown()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    rt = TaskRuntime(n_workers=1)
+    assert rt.san is not None and rt.san.raise_on_shutdown
+    rt.shutdown()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    rt = TaskRuntime(n_workers=1)
+    assert rt.san is None
+    rt.shutdown()
+
+
+# --------------------------------------------------------- event catalog
+def test_tracer_rejects_unregistered_event():
+    tr = Tracer(enabled=True)
+    tr.event("task.start", 1)  # catalog name: fine
+    with pytest.raises(ValueError):
+        tr.event("definitely.not.registered", 1)
+    tr_off = Tracer(enabled=False)
+    tr_off.event("definitely.not.registered", 1)  # disabled: free no-op
+
+
+def test_register_event_extends_catalog():
+    eid = register_event("test.custom-event")
+    try:
+        assert EVENTS["test.custom-event"] == eid
+        assert register_event("test.custom-event") == eid  # idempotent
+        Tracer(enabled=True).event("test.custom-event", 5)
+    finally:
+        del EVENTS["test.custom-event"]
+
+
+# ----------------------------------------------------------- static lint
+def _lint_snippet(tmp_path, name, code):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(code))
+    return run_lint([str(p)])
+
+
+def test_lint_lock_try_finally(tmp_path):
+    findings = _lint_snippet(tmp_path, "sched.py", """
+        def bad(self):
+            self._lock.lock()
+            self._q.append(1)
+            self._lock.unlock()
+
+        def good(self):
+            self._lock.lock()
+            try:
+                self._q.append(1)
+            finally:
+                self._lock.unlock()
+    """)
+    assert [f.rule for f in findings] == ["lock-try-finally"]
+    assert findings[0].line == 3
+
+
+def test_lint_waitfree_blocking(tmp_path):
+    (tmp_path / "core").mkdir()
+    findings = _lint_snippet(tmp_path, "core/asm.py", """
+        import time
+
+        class MailBox:
+            def _deliver(self, msg):
+                time.sleep(0.01)
+
+        class MailBoxPool:
+            def acquire_box(self):
+                self._lock.acquire()  # pool is exempt by design
+    """)
+    assert [f.rule for f in findings] == ["waitfree-blocking"]
+
+
+def test_lint_shared_random(tmp_path):
+    (tmp_path / "core").mkdir()
+    findings = _lint_snippet(tmp_path, "core/sched.py", """
+        import random
+
+        def pick(n):
+            return random.randrange(n)
+
+        def make_rng(seed):
+            return random.Random(seed)
+    """)
+    assert [f.rule for f in findings] == ["shared-random"]
+
+
+def test_lint_task_retention(tmp_path):
+    findings = _lint_snippet(tmp_path, "engine.py", """
+        def bad(self, rt):
+            self.t = rt.spawn(fn)
+
+        def bad_indirect(self, rt):
+            t = rt.spawn(fn)
+            self.tasks[0] = t
+
+        def bad_append(self, rt):
+            t = rt.spawn(fn)
+            self.tasks.append(t)
+
+        def good(self, rt):
+            self.t = rt.spawn(fn, retain=True)
+            h = rt.spawn(fn, handle=True)
+            self.h = h
+            local_only = rt.spawn(fn)
+            return local_only is None
+    """)
+    assert [f.rule for f in findings] == ["task-retention"] * 3
+
+
+def test_lint_event_catalog(tmp_path):
+    (tmp_path / "core").mkdir()
+    (tmp_path / "core" / "instrument.py").write_text(
+        'EVENTS = {"task.start": 1}\n')
+    (tmp_path / "core" / "run.py").write_text(textwrap.dedent("""
+        def go(tracer, name):
+            tracer.event("task.start", 1)
+            tracer.event("made.up", 2)
+            tracer.event(name, 3)
+    """))
+    findings = run_lint([str(tmp_path)])
+    assert [f.rule for f in findings] == ["event-catalog", "event-catalog"]
+
+
+def test_lint_suppression(tmp_path):
+    findings = _lint_snippet(tmp_path, "sched.py", """
+        def justified(self):
+            # released by the callee's finally:  lint: ok(lock-try-finally)
+            self._lock.lock()
+            self._serve()
+    """)
+    assert findings == []
+
+
+def test_lint_clean_on_repo_source():
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    findings = run_lint([root])
+    assert findings == [], findings

@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""Run the runtime-invariant AST lint (repro.analyze.lint) over source
+trees. Exit status 1 on any finding — `make lint` / CI gate.
+
+Usage: python tools/lint_runtime.py [path ...]   (default: src/repro)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analyze.lint import RULES, run_lint  # noqa: E402
+
+
+def main(argv: list) -> int:
+    paths = argv[1:] or [os.path.join(_ROOT, "src", "repro")]
+    findings = run_lint(paths)
+    for f in findings:
+        rel = os.path.relpath(f.file, _ROOT)
+        print(f"{rel}:{f.line}: [{f.rule}] {f.message}")
+    if findings:
+        by_rule: dict = {}
+        for f in findings:
+            by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+        counts = ", ".join(f"{r}={n}" for r, n in sorted(by_rule.items()))
+        print(f"\nlint: {len(findings)} finding(s) ({counts})")
+        print("suppress a justified exception with  # lint: ok(rule-id)")
+        return 1
+    print(f"lint: clean ({len(RULES)} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
