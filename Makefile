@@ -2,7 +2,7 @@
 # ROADMAP.md; no install step is needed.
 PY ?= python
 
-.PHONY: verify lint sanitize-smoke bench-smoke bench-wake bench ci
+.PHONY: verify lint sanitize-smoke explore-smoke bench-smoke bench-wake bench ci
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,6 +15,9 @@ sanitize-smoke:
 	  $(PY) -m pytest -q tests/test_lifecycle.py tests/test_parking.py \
 	  tests/test_scheduler.py tests/test_tasksan.py
 
+explore-smoke:
+	PYTHONPATH=src $(PY) tools/taskcheck.py --smoke --out taskcheck-out
+
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --smoke --json taskbench-smoke.json
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --repeats 3 --json taskbench-wake.json
@@ -25,4 +28,4 @@ bench-wake:
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-ci: lint verify sanitize-smoke bench-smoke
+ci: lint verify sanitize-smoke explore-smoke bench-smoke

@@ -8,8 +8,29 @@
 - :mod:`repro.analyze.lint` — the static AST lint with repo-specific rules
   (``tools/lint_runtime.py`` is the CLI; ``make lint`` runs it over
   ``src/repro``).
+- :mod:`repro.analyze.explore` — ``taskcheck``, the deterministic schedule
+  explorer behind ``TaskRuntime(explore=...)``: serializes the runtime
+  under a controlling policy (random walks, preemption-bounded), records
+  replayable decision traces (``tools/taskcheck.py``).
+- :mod:`repro.analyze.deadlock` — the online deadlock detector taskcheck
+  drives: static lock-order graph (shared with tasksan) + runtime wait-for
+  edges with incremental cycle detection.
 """
+from repro.analyze.deadlock import (DeadlockDetector, LockOrderGraph,
+                                    WaitEdge)
+from repro.analyze.explore import (DeadlockError, ExploreReport,
+                                   LivelockError, PreemptionBoundedPolicy,
+                                   RandomWalkPolicy, ReplayDivergence,
+                                   ReplayPolicy, SchedulePolicy,
+                                   ScheduleExplorer, explore, replay)
 from repro.analyze.lint import Finding, run_lint
 from repro.analyze.tsan import TaskSanError, TaskSanitizer
 
-__all__ = ["TaskSanitizer", "TaskSanError", "run_lint", "Finding"]
+__all__ = [
+    "TaskSanitizer", "TaskSanError", "run_lint", "Finding",
+    "ScheduleExplorer", "SchedulePolicy", "RandomWalkPolicy",
+    "PreemptionBoundedPolicy", "ReplayPolicy", "ExploreReport",
+    "explore", "replay",
+    "DeadlockError", "LivelockError", "ReplayDivergence",
+    "DeadlockDetector", "LockOrderGraph", "WaitEdge",
+]

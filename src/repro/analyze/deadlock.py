@@ -1,0 +1,311 @@
+"""Deadlock detection: static lock-order graph + runtime wait-for edges.
+
+Two layers share this module:
+
+* :class:`LockOrderGraph` — the *static* acquisition-order graph tasksan has
+  always kept (a cycle in acquisition order is a deadlock *candidate* even
+  if no run ever wedged). It lives here so the dynamic detector and the
+  sanitizer maintain one graph instead of two divergent copies;
+  :mod:`repro.analyze.tsan` imports it back.
+* :class:`DeadlockDetector` — the *dynamic* layer used by the schedule
+  explorer (:mod:`repro.analyze.explore`): every blocked thread contributes
+  a wait-for edge (ticket/DTLock waiter -> lock owner, ``taskwait`` /
+  ``TaskGroup.wait`` -> awaited task/group, parked worker -> pending wake,
+  full-SPSC producer -> draining consumer) and incremental cycle detection
+  runs at the moment the closing edge appears — the report carries the full
+  cycle plus each participating thread's held-lock stack and, when the
+  static graph already knew the inverted order, that context too.
+
+The detector also hosts the *no-progress watchdog* bookkeeping: the
+explorer feeds it step/finalize counters and asks whether the run has
+livelocked (no task finalized across N explorer steps while the runtime
+still has live tasks — the PR-6 sleep(0) convoy signature).
+
+Detector verdicts are plain dicts (kind/message/details); the explorer
+wraps them into :class:`repro.analyze.tsan.Finding` objects. This module
+must not import tsan (tsan imports the graph from here).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+# finding kinds produced by this layer
+DEADLOCK_CYCLE = "deadlock.cycle"
+LIVELOCK = "deadlock.livelock"
+
+# wait kinds (the explorer's wait_until tags)
+WAIT_LOCK = "lock"
+WAIT_TASK = "taskwait"
+WAIT_GROUP = "group-wait"
+WAIT_PARK = "park"
+WAIT_BARRIER = "barrier"
+WAIT_SPSC = "spsc-full"
+
+
+class LockOrderGraph:
+    """Acquisition-order graph over watched lock instances.
+
+    ``add_edge(a, b)`` records "a held while b acquired"; a path
+    ``b ->* a`` closing a cycle is returned (once per lock pair) as a
+    ``(label_a, label_b)`` tuple for the caller to report. Not thread-safe:
+    callers (tasksan's internal lock, the explorer's serialized world)
+    provide the exclusion.
+    """
+
+    def __init__(self):
+        self._edges: dict = {}        # id(lock) -> set(id(lock))
+        self._names: dict = {}        # id(lock) -> label
+        self._cycles_seen: set = set()
+
+    def name_lock(self, lock, name: Optional[str] = None) -> None:
+        self._names[id(lock)] = name or type(lock).__name__
+
+    def label(self, lock) -> str:
+        return self._names.get(id(lock), type(lock).__name__)
+
+    def has_edge(self, a, b) -> bool:
+        return id(b) in self._edges.get(id(a), ())
+
+    def add_edge(self, a, b) -> Optional[tuple]:
+        """Record a->b; returns (label_a, label_b) when this edge closes a
+        NEW cycle in the acquisition order, else None."""
+        succs = self._edges.setdefault(id(a), set())
+        if id(b) in succs:
+            return None
+        succs.add(id(b))
+        # new edge a->b: a path b ->* a now closes a cycle
+        stack, seen = [id(b)], set()
+        while stack:
+            n = stack.pop()
+            if n == id(a):
+                key = frozenset((id(a), id(b)))
+                if key in self._cycles_seen:
+                    return None
+                self._cycles_seen.add(key)
+                return (self.label(a), self.label(b))
+            if n in seen:
+                continue
+            seen.add(n)
+            stack.extend(self._edges.get(n, ()))
+        return None
+
+
+class WaitEdge:
+    """One blocked thread's wait-for record."""
+
+    __slots__ = ("kind", "resource", "label", "provider", "task", "group",
+                 "timed", "info")
+
+    def __init__(self, kind: str, resource=None, label: str = "",
+                 provider: Optional[str] = None, task=None, group=None,
+                 timed: bool = False, **info):
+        self.kind = kind
+        self.resource = resource      # lock object / ("group", id) / ...
+        self.label = label or kind
+        self.provider = provider      # thread that can satisfy (if known)
+        self.task = task              # waiter's current task (cycle checks)
+        self.group = group            # awaited TaskGroup (group-wait)
+        self.timed = timed            # expirable (park, timed taskwait)
+        self.info = info
+
+    def describe(self) -> str:
+        return self.label
+
+
+class DeadlockDetector:
+    """Wait-for graph + held-lock stacks + watchdog over explorer threads.
+
+    ``name_fn`` maps the calling thread to its explorer name (falls back to
+    the OS thread name when unregistered). All mutation happens from the
+    single running thread of a serialized exploration, so no internal lock
+    is needed; standalone users must serialize calls themselves.
+    """
+
+    def __init__(self, name_fn: Optional[Callable[[], str]] = None,
+                 order_graph: Optional[LockOrderGraph] = None):
+        import threading
+        self._name_fn = name_fn or (lambda: threading.current_thread().name)
+        self.order = order_graph or LockOrderGraph()
+        self._owners: dict = {}   # id(lock) -> thread name
+        self._held: dict = {}     # thread name -> [lock, ...]
+        self._waits: dict = {}    # thread name -> WaitEdge
+        self._reported: set = set()
+
+    # ---------------------------------------------------- monitor protocol
+    # Installed as a lock's ``_monitor`` by the explorer: tracks ownership
+    # and held stacks, and feeds the shared static order graph.
+    def on_acquire(self, lock) -> Optional[dict]:
+        me = self._name_fn()
+        held = self._held.setdefault(me, [])
+        verdict = None
+        for h in held:
+            if h is not lock:
+                cyc = self.order.add_edge(h, lock)
+                if cyc is not None:
+                    verdict = {
+                        "kind": DEADLOCK_CYCLE,
+                        "message": (
+                            f"lock-order inversion: {cyc[0]} -> {cyc[1]} "
+                            f"acquired by {me}, but {cyc[1]} ->* {cyc[0]} "
+                            "was observed earlier — acquisition order has "
+                            "a cycle (deadlock candidate)"),
+                        "locks": sorted(cyc), "thread": me, "static": True}
+        held.append(lock)
+        self._owners[id(lock)] = me
+        return verdict
+
+    def on_release(self, lock) -> None:
+        me = self._name_fn()
+        held = self._held.get(me, ())
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] is lock:
+                del held[i]
+                break
+        if self._owners.get(id(lock)) == me:
+            del self._owners[id(lock)]
+
+    def owner(self, lock) -> Optional[str]:
+        return self._owners.get(id(lock))
+
+    def held_stack(self, thread: str) -> list:
+        return [self.order.label(lk) for lk in self._held.get(thread, ())]
+
+    # ---------------------------------------------------- wait-for edges
+    def on_block(self, thread: str, wait: WaitEdge) -> Optional[dict]:
+        """Record the wait; returns a finding dict when this edge closes a
+        wait-for cycle (checked incrementally, at block time)."""
+        self._waits[thread] = wait
+        if wait.kind == WAIT_GROUP:
+            hit = self._group_member_cycle(thread, wait)
+            if hit is not None:
+                return hit
+        if wait.kind == WAIT_TASK:
+            hit = self._task_self_cycle(thread, wait)
+            if hit is not None:
+                return hit
+        return self._follow_cycle(thread)
+
+    def on_unblock(self, thread: str) -> None:
+        self._waits.pop(thread, None)
+
+    def waiting(self, thread: str) -> Optional[WaitEdge]:
+        return self._waits.get(thread)
+
+    def _next_hop(self, wait: WaitEdge) -> Optional[str]:
+        """The thread this wait ultimately waits FOR, if statically known."""
+        if wait.kind == WAIT_LOCK and wait.resource is not None:
+            return self._owners.get(id(wait.resource))
+        return wait.provider
+
+    def _follow_cycle(self, start: str) -> Optional[dict]:
+        """Chase thread -> resource-owner -> ... ; a return to ``start``
+        (or any revisit) is a cycle. Only statically-resolvable hops (lock
+        owners, declared providers) participate."""
+        chain = [start]
+        cur = start
+        for _ in range(len(self._waits) + 1):
+            w = self._waits.get(cur)
+            if w is None:
+                return None  # chain ends at a runnable thread: no cycle
+            nxt = self._next_hop(w)
+            if nxt is None:
+                return None
+            if nxt in chain:
+                cycle = chain[chain.index(nxt):]
+                return self._cycle_report(cycle)
+            chain.append(nxt)
+            cur = nxt
+        return None
+
+    def _cycle_report(self, cycle: list) -> Optional[dict]:
+        key = frozenset(cycle)
+        if key in self._reported:
+            return None
+        self._reported.add(key)
+        legs = []
+        static_ctx = []
+        for t in cycle:
+            w = self._waits.get(t)
+            if w is None:
+                continue
+            held = self.held_stack(t)
+            legs.append(f"{t} holds {held or '[]'} and waits for "
+                        f"{w.describe()}")
+            if w.kind == WAIT_LOCK and w.resource is not None:
+                for h in self._held.get(t, ()):
+                    if self.order.has_edge(w.resource, h):
+                        static_ctx.append(
+                            f"{self.order.label(w.resource)} -> "
+                            f"{self.order.label(h)}")
+        msg = ("wait-for cycle among {" + ", ".join(cycle) + "}: "
+               + "; ".join(legs))
+        if static_ctx:
+            msg += (" [static lock-order graph already recorded the "
+                    "inverted order: " + ", ".join(sorted(set(static_ctx)))
+                    + "]")
+        return {"kind": DEADLOCK_CYCLE, "message": msg, "threads": cycle,
+                "held": {t: self.held_stack(t) for t in cycle}}
+
+    def _group_member_cycle(self, thread: str, wait: WaitEdge):
+        """``group.wait()`` from inside a member (or a member's descendant)
+        can never return: the group drains only when the waiter's own task
+        fully finishes — a self-cycle of length one."""
+        group = wait.group
+        t = wait.task
+        hops = 0
+        while t is not None and hops < 64:
+            if getattr(t, "group", None) is group and group is not None:
+                return {
+                    "kind": DEADLOCK_CYCLE,
+                    "message": (
+                        f"{thread} waits on TaskGroup "
+                        f"{getattr(group, 'name', '?')!r} from inside member "
+                        f"task #{t.task_id}({t.name}) — the group cannot "
+                        "drain until this very task finishes (taskwait "
+                        "self-cycle)"),
+                    "threads": [thread], "group": getattr(group, "name", "?"),
+                    "task": f"task#{t.task_id}({t.name})"}
+            t = getattr(t, "parent", None)
+            hops += 1
+        return None
+
+    def _task_self_cycle(self, thread: str, wait: WaitEdge):
+        waited = wait.info.get("target")
+        t = wait.task
+        if waited is None or t is None:
+            return None
+        if waited is t:
+            return {
+                "kind": DEADLOCK_CYCLE,
+                "message": (f"{thread} calls taskwait on its OWN running "
+                            f"task #{t.task_id}({t.name}) — the body cannot "
+                            "finish while it waits for itself"),
+                "threads": [thread], "task": f"task#{t.task_id}({t.name})"}
+        return None
+
+    # ---------------------------------------------------- global stall
+    def stall_report(self, blocked: dict) -> dict:
+        """All threads blocked on untimed waits and nothing can run: a hard
+        deadlock even when no single chain closed a resolvable cycle
+        (unknown providers, mixed wait kinds). ``blocked`` maps thread name
+        -> WaitEdge."""
+        cyc = None
+        for t in blocked:
+            cyc = self._follow_cycle(t)
+            if cyc is not None:
+                return cyc
+        legs = [f"{t} holds {self.held_stack(t) or '[]'} and waits for "
+                f"{w.describe()}" for t, w in sorted(blocked.items())]
+        return {"kind": DEADLOCK_CYCLE,
+                "message": ("global stall: every thread is blocked and no "
+                            "wait can expire — " + "; ".join(legs)),
+                "threads": sorted(blocked)}
+
+    def livelock_report(self, steps: int, live: int, blocked: list) -> dict:
+        return {"kind": LIVELOCK,
+                "message": (
+                    f"no task finalized across {steps} explorer steps with "
+                    f"{live} live task(s) and blocked threads "
+                    f"{blocked or '[]'} — the schedule is spinning without "
+                    "progress (livelock / convoy)"),
+                "steps": steps, "live": live, "blocked": blocked}

@@ -1,0 +1,751 @@
+"""taskcheck — deterministic schedule explorer for the task runtime.
+
+tasksan (repro.analyze.tsan) can only flag bugs on interleavings that
+happen to occur. This module drives the runtime into interleavings *on
+purpose*: under ``TaskRuntime(explore=...)`` every runtime thread is
+serialized behind one execution token, and the runtime's existing
+interception points — lock wait loops in :mod:`repro.core.locks`,
+park/wake in :mod:`repro.core.parking`, ``MailBox._deliver``, scheduler
+enqueue/dequeue, task finalize — become cooperative yield points where a
+:class:`SchedulePolicy` decides which thread runs next.
+
+Mechanics
+---------
+* Exactly one registered thread holds the token; all others block on a
+  per-thread event. At every yield point the holder re-evaluates the
+  predicates of blocked threads (pure reads, e.g. "serving == my ticket"),
+  asks the policy for the next thread, and hands the token over.
+* A thread that cannot proceed calls :meth:`ScheduleExplorer.wait_until`
+  with a side-effect-free predicate plus a :class:`~repro.analyze.deadlock.
+  WaitEdge` describing *what* it waits for. Blocking feeds the
+  :class:`~repro.analyze.deadlock.DeadlockDetector`'s wait-for graph;
+  a closing cycle is reported immediately (full cycle + per-thread
+  held-lock stacks) and the participants are poisoned with
+  :class:`DeadlockError`.
+* When nothing is runnable, the policy force-expires one *timed* wait
+  (park timeouts, timed taskwait/barrier) — wall-clock never decides, so
+  schedules replay exactly. An expired park with work still pending is
+  the lost-wake signature and is reported. No timed waits at all is a
+  hard deadlock (stall report over every blocked thread).
+* A no-progress watchdog fires when no task finalizes across N explorer
+  steps while tasks are live (the PR-6 sleep(0) convoy signature): the
+  finding is recorded and serialization is abandoned so the run can
+  drain natively.
+
+Policies: :class:`RandomWalkPolicy` (seeded random walk over yield
+points) and :class:`PreemptionBoundedPolicy` (CHESS-style: at most
+``bound`` *preemptive* switches per schedule; forced switches at blocking
+points are free). Every decision that deviates from "keep running the
+current thread" is recorded as ``[step, kind, choice]``; the resulting
+trace replays bit-for-bit via :class:`ReplayPolicy` /
+``tools/taskcheck.py --replay trace.json``.
+
+Disabled cost: every hook site is one class-attribute is-None test, and
+the lock hooks sit *inside* the contended wait loops, so the uncontended
+fast path pays nothing (same budget as tasksan's ``_monitor`` pattern —
+asserted by the taskbench overhead guard).
+"""
+from __future__ import annotations
+
+import json
+import random
+import threading
+from typing import Callable, Optional
+
+from repro.analyze.deadlock import (DEADLOCK_CYCLE, LIVELOCK,
+                                    DeadlockDetector, WaitEdge,
+                                    WAIT_BARRIER, WAIT_GROUP, WAIT_LOCK,
+                                    WAIT_PARK, WAIT_SPSC, WAIT_TASK)
+from repro.analyze.tsan import Finding, LOST_WAKE
+from repro.core.instrument import register_event
+
+# wait_until outcomes
+OK = "ok"                # predicate satisfied (and claim, if any, succeeded)
+TIMEOUT = "timeout"      # timed wait force-expired by the policy
+DISABLED = "disabled"    # not exploring / thread unregistered: caller falls
+                         # back to its native waiting strategy
+
+_EV_SWITCH = "explore.switch"
+_EV_EXPIRE = "explore.expire"
+_EV_SCHEDULE = "explore.schedule"
+_EV_REPLAY = "explore.replay"
+_EV_CYCLE = "deadlock.cycle"
+_EV_LIVELOCK = "deadlock.livelock"
+for _n in (_EV_SWITCH, _EV_EXPIRE, _EV_SCHEDULE, _EV_REPLAY, _EV_CYCLE,
+           _EV_LIVELOCK):
+    register_event(_n)
+
+# scenario-body yield points reach the ambient explorer through here
+_AMBIENT = threading.local()
+
+
+def checkpoint() -> None:
+    """Explicit yield point for task bodies / scenario code. No-op unless
+    the calling thread is registered with an active explorer."""
+    exp = getattr(_AMBIENT, "exp", None)
+    if exp is not None:
+        exp.yield_point("checkpoint")
+
+
+def current_name() -> Optional[str]:
+    """The calling thread's explorer name (None when unregistered)."""
+    exp = getattr(_AMBIENT, "exp", None)
+    if exp is None:
+        return None
+    ts = getattr(exp._tls, "ts", None)
+    return ts.name if ts is not None else None
+
+
+class ExploreError(RuntimeError):
+    """Base for errors the explorer injects into participating threads."""
+
+
+class DeadlockError(ExploreError):
+    """Raised in every thread participating in a detected wait-for cycle."""
+
+
+class LivelockError(ExploreError):
+    """Raised when the no-progress watchdog condemns the schedule."""
+
+
+class ReplayDivergence(RuntimeError):
+    """A replayed run took a decision path the trace did not record —
+    the scenario is nondeterministic (wall-clock, unseeded randomness,
+    an unregistered thread) or the code under test changed."""
+
+
+# --------------------------------------------------------------- policies
+class SchedulePolicy:
+    """Base policy: seeded random walk. ``decide`` is consulted at every
+    decision point; drawing from the RNG only there keeps a (policy, seed)
+    pair deterministic for a deterministic scenario."""
+
+    kind = "random-walk"
+
+    def __init__(self, seed: int = 0, switch_p: float = 0.25):
+        self.seed = seed
+        self.switch_p = switch_p
+        self._rng = random.Random(seed)
+
+    def reset(self, schedule_index: int = 0) -> "SchedulePolicy":
+        self._rng = random.Random(self.seed + 0x9E3779B1 * schedule_index)
+        return self
+
+    def decide(self, kind: str, step: int, candidates: list,
+               current: Optional[str]) -> str:
+        if kind == "yield":
+            others = [c for c in candidates if c != current]
+            if others and self._rng.random() < self.switch_p \
+                    and self._may_preempt():
+                self._preempted()
+                return self._rng.choice(others)
+            return current
+        return self._rng.choice(candidates)  # "blocked" / "expire": forced
+
+    def _may_preempt(self) -> bool:
+        return True
+
+    def _preempted(self) -> None:
+        pass
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "seed": self.seed,
+                "switch_p": self.switch_p}
+
+
+class RandomWalkPolicy(SchedulePolicy):
+    pass
+
+
+class PreemptionBoundedPolicy(SchedulePolicy):
+    """CHESS-style: at most ``bound`` preemptive context switches per
+    schedule. Switches at blocking points don't count — most concurrency
+    bugs hide behind 2-3 preemptions, so bounding them keeps the schedule
+    space tractable."""
+
+    kind = "preemption-bounded"
+
+    def __init__(self, seed: int = 0, bound: int = 2,
+                 switch_p: float = 0.25):
+        super().__init__(seed, switch_p)
+        self.bound = bound
+        self._used = 0
+
+    def reset(self, schedule_index: int = 0) -> "PreemptionBoundedPolicy":
+        super().reset(schedule_index)
+        self._used = 0
+        return self
+
+    def _may_preempt(self) -> bool:
+        return self._used < self.bound
+
+    def _preempted(self) -> None:
+        self._used += 1
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d["bound"] = self.bound
+        return d
+
+
+class ReplayPolicy(SchedulePolicy):
+    """Replays a recorded decision trace exactly. Every deviation from
+    "continue current" was recorded as [step, kind, choice]; any live
+    decision point the trace cannot answer raises ReplayDivergence."""
+
+    kind = "replay"
+
+    def __init__(self, trace: dict):
+        super().__init__(seed=trace.get("policy", {}).get("seed", 0))
+        self._decisions = [tuple(d) for d in trace.get("decisions", ())]
+        self._i = 0
+
+    def decide(self, kind: str, step: int, candidates: list,
+               current: Optional[str]) -> str:
+        d = self._decisions[self._i] if self._i < len(self._decisions) \
+            else None
+        if d is not None and d[0] == step:
+            _, dkind, choice = d
+            if dkind != kind or choice not in candidates:
+                raise ReplayDivergence(
+                    f"step {step}: trace recorded ({dkind!r}, {choice!r}) "
+                    f"but the live run offers ({kind!r}, {candidates})")
+            self._i += 1
+            return choice
+        if kind == "yield":
+            return current  # unrecorded yield == no switch
+        raise ReplayDivergence(
+            f"step {step}: live run forced a {kind!r} decision among "
+            f"{candidates} that the trace never recorded")
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "replayed": len(self._decisions)}
+
+
+# --------------------------------------------------------------- explorer
+class _TState:
+    __slots__ = ("name", "ev", "wait", "expired", "done", "poison")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.ev = threading.Event()
+        self.wait: Optional[WaitEdge] = None
+        self.expired = False
+        self.done = False
+        self.poison: Optional[BaseException] = None
+
+
+class _FanoutMonitor:
+    """Chains the explorer behind an already-installed lock monitor
+    (tasksan), so both observe every acquire/release."""
+
+    __slots__ = ("_ms",)
+
+    def __init__(self, *monitors):
+        self._ms = monitors
+
+    def on_acquire(self, lock):
+        for m in self._ms:
+            m.on_acquire(lock)
+
+    def on_release(self, lock):
+        for m in self._ms:
+            m.on_release(lock)
+
+
+class ScheduleExplorer:
+    """Serializes registered threads behind one token and explores their
+    interleavings under a :class:`SchedulePolicy`. See the module
+    docstring for the full protocol."""
+
+    def __init__(self, policy: Optional[SchedulePolicy] = None, *,
+                 max_steps: int = 50000, watchdog: int = 3000):
+        self.policy = policy or PreemptionBoundedPolicy()
+        self.max_steps = max_steps
+        self.watchdog = watchdog
+        self.enabled = True
+        self.truncated = False
+        self.findings: list[Finding] = []
+        self.decisions: list = []       # [step, kind, choice]
+        self._mx = threading.Lock()
+        self._reg_cv = threading.Condition(self._mx)
+        self._tls = threading.local()
+        self._threads: dict[str, _TState] = {}
+        self._current: Optional[str] = None
+        self._step = 0
+        self._progress_step = 0
+        self._watchdog_fired = False
+        self._lost_wake_reported = False
+        self._rt = None
+        self.detector = DeadlockDetector(name_fn=self._name)
+
+    # ------------------------------------------------------------ install
+    def install(self, runtime) -> None:
+        """Attach to a runtime: watch its scheduler locks, tag parking and
+        the scheduler with the explorer hook. MailBoxes are tagged per
+        lease by ``TaskRuntime._mailbox`` (same pattern as tasksan)."""
+        self._rt = runtime
+        runtime._parking.exp = self
+        sched = runtime.scheduler
+        sched._explorer = self
+        lk = getattr(sched, "_lock", None)
+        if lk is not None and hasattr(lk, "lock"):
+            self.watch_lock(lk, "scheduler.lock")
+        for i, l in enumerate(getattr(sched, "_add_locks", ()) or ()):
+            self.watch_lock(l, f"scheduler.add_lock[{i}]")
+        for i, l in enumerate(getattr(sched, "_lks", ()) or ()):
+            self.watch_lock(l, f"scheduler.deque_lock[{i}]")
+
+    def watch_lock(self, lock, name: Optional[str] = None) -> None:
+        """Put a lock under exploration: its wait loops yield to the
+        explorer and its ownership feeds the wait-for graph."""
+        self.detector.order.name_lock(lock, name)
+        lock._explorer = self
+        cur = lock._monitor
+        if cur is None:
+            lock._monitor = self
+        elif cur is not self and not isinstance(cur, _FanoutMonitor):
+            lock._monitor = _FanoutMonitor(cur, self)
+
+    # ------------------------------------------------- lock monitor hooks
+    def on_acquire(self, lock) -> None:
+        if not self.enabled:
+            return
+        v = self.detector.on_acquire(lock)
+        if v is not None:
+            with self._mx:
+                self._add_finding(v)
+
+    def on_release(self, lock) -> None:
+        if not self.enabled:
+            return
+        self.detector.on_release(lock)
+
+    # ------------------------------------------------------- registration
+    def _name(self) -> str:
+        ts = getattr(self._tls, "ts", None)
+        return ts.name if ts is not None else threading.current_thread().name
+
+    def register(self, name: str) -> None:
+        """Join the serialized world. The first registrant gets the token
+        immediately; later ones block until a handoff reaches them."""
+        if getattr(self._tls, "ts", None) is not None:
+            return
+        if not self.enabled:
+            return
+        ts = _TState(name)
+        self._tls.ts = ts
+        _AMBIENT.exp = self
+        with self._mx:
+            self._threads[name] = ts
+            self._reg_cv.notify_all()
+            if self._current is None:
+                self._current = name
+                ts.ev.set()
+        ts.ev.wait()
+        ts.ev.clear()
+        self._check_poison(ts)
+
+    def await_threads(self, names, timeout: float = 10.0) -> None:
+        """Block (a real wait — registration needs no token) until every
+        named thread registered."""
+        with self._reg_cv:
+            ok = self._reg_cv.wait_for(
+                lambda: all(n in self._threads for n in names)
+                or not self.enabled, timeout)
+        if not ok:
+            raise RuntimeError(
+                f"explorer: threads failed to register within {timeout}s: "
+                f"{[n for n in names if n not in self._threads]}")
+
+    def thread_exit(self) -> None:
+        """A registered thread is leaving (worker loop done)."""
+        ts = getattr(self._tls, "ts", None)
+        if ts is None:
+            return
+        with self._mx:
+            ts.done = True
+            if self.enabled and self._current == ts.name:
+                cands = self._runnable()
+                if cands:
+                    self._grant(cands[0])
+
+    # -------------------------------------------------------- yield/block
+    def yield_point(self, kind: str, arg: int = 0) -> None:
+        """Cooperative preemption point: the policy may switch threads."""
+        ts = getattr(self._tls, "ts", None)
+        if ts is None or not self.enabled:
+            return
+        switched = False
+        with self._mx:
+            if not self.enabled:
+                return
+            self._tick()
+            self._reeval_blocked()
+            cands = self._runnable()
+            if len(cands) > 1:
+                choice = self.policy.decide("yield", self._step, cands,
+                                            ts.name)
+                if choice != ts.name:
+                    self.decisions.append([self._step, "yield", choice])
+                    self._emit(_EV_SWITCH, self._step)
+                    self._grant(choice)
+                    switched = True
+        if switched:
+            ts.ev.wait()
+            ts.ev.clear()
+            self._check_poison(ts)
+
+    def wait_until(self, pred: Callable[[], bool], *, kind: str,
+                   resource=None, label: str = "",
+                   provider: Optional[str] = None, task=None, group=None,
+                   timed: bool = False, claim=None, target=None) -> str:
+        """Block until ``pred()`` holds (then run ``claim`` — the actual
+        acquisition, executed only by this thread while it holds the
+        token). ``pred`` MUST be side-effect-free: other threads evaluate
+        it during their yield points. Returns OK, TIMEOUT (timed wait
+        force-expired) or DISABLED (not exploring — caller must fall back
+        to its native wait)."""
+        ts = getattr(self._tls, "ts", None)
+        if ts is None:
+            return DISABLED
+        while True:
+            if not self.enabled:
+                return DISABLED
+            if pred():
+                if claim is None or claim():
+                    return OK
+                continue  # claim raced a fast-path acquire: re-block
+            st = self._block(ts, WaitEdge(
+                kind, resource=resource, label=label or kind,
+                provider=provider, task=task, group=group, timed=timed,
+                pred=pred, target=target))
+            if st is not None:
+                return st
+
+    def lock_wait(self, lock, pred: Callable[[], bool]) -> bool:
+        """Wait loop hook for ticket-style locks: True once ``pred`` holds
+        (caller owns its granted ticket), False when not exploring (caller
+        resumes its native backoff spin)."""
+        return self.wait_until(
+            pred, kind=WAIT_LOCK, resource=lock,
+            label=self.detector.order.label(lock)) != DISABLED
+
+    def mutex_wait(self, lock) -> bool:
+        """Contended MutexLock: wait until unowned, then claim with a
+        nonblocking acquire. True iff the claim acquired the lock; False
+        when not exploring (caller blocks natively)."""
+        return self.wait_until(
+            lambda: self.detector.owner(lock) is None,
+            kind=WAIT_LOCK, resource=lock,
+            label=self.detector.order.label(lock),
+            claim=lambda: lock._lk.acquire(blocking=False)) == OK
+
+    def on_progress(self) -> None:
+        """A task finalized: reset the no-progress watchdog."""
+        if not self.enabled:
+            return
+        with self._mx:
+            self._progress_step = self._step
+
+    # ---------------------------------------------------------- internals
+    def _block(self, ts: _TState, wait: WaitEdge) -> Optional[str]:
+        """One blocking round. Returns OK-precursor None (granted: caller
+        re-checks pred), TIMEOUT, or DISABLED."""
+        with self._mx:
+            if not self.enabled:
+                return DISABLED
+            self._tick()
+            ts.wait = wait
+            verdict = self.detector.on_block(ts.name, wait)
+            if verdict is not None:
+                self._add_finding(verdict)
+                self._emit(_EV_CYCLE, self._step)
+                exc = DeadlockError(verdict["message"])
+                for name in verdict.get("threads", ()):
+                    if name != ts.name:
+                        self._poison(name, DeadlockError(verdict["message"]))
+                ts.wait = None
+                self.detector.on_unblock(ts.name)
+                raise exc
+            self._reeval_blocked()
+            cands = [n for n in self._runnable() if n != ts.name]
+            if cands:
+                choice = self.policy.decide("blocked", self._step, cands,
+                                            None)
+                self.decisions.append([self._step, "blocked", choice])
+                self._grant(choice)
+            else:
+                timed = sorted(n for n, t in self._threads.items()
+                               if t.wait is not None and t.wait.timed)
+                if timed:
+                    choice = self.policy.decide("expire", self._step, timed,
+                                                None)
+                    self.decisions.append([self._step, "expire", choice])
+                    self._emit(_EV_EXPIRE, self._step)
+                    self._expire(choice)
+                    if choice == ts.name:
+                        return TIMEOUT
+                    self._grant(choice)
+                else:
+                    blocked = {n: t.wait for n, t in self._threads.items()
+                               if t.wait is not None}
+                    verdict = self.detector.stall_report(blocked)
+                    self._add_finding(verdict)
+                    self._emit(_EV_CYCLE, self._step)
+                    exc = DeadlockError(verdict["message"])
+                    for name in blocked:
+                        if name != ts.name:
+                            self._poison(name, DeadlockError(
+                                verdict["message"]))
+                    ts.wait = None
+                    self.detector.on_unblock(ts.name)
+                    raise exc
+        ts.ev.wait()
+        ts.ev.clear()
+        self._check_poison(ts)
+        if ts.expired:
+            ts.expired = False
+            return TIMEOUT
+        return None  # granted because the predicate held: caller re-checks
+
+    def _tick(self) -> None:
+        # callers hold self._mx
+        self._step += 1
+        if self.truncated or self._watchdog_fired:
+            return
+        if self._step >= self.max_steps:
+            self.truncated = True
+            self._release_all_locked()
+            return
+        if self.watchdog and \
+                self._step - self._progress_step >= self.watchdog:
+            live = self._live()
+            if live > 0:
+                self._watchdog_fired = True
+                blocked = sorted(n for n, t in self._threads.items()
+                                 if t.wait is not None)
+                self._add_finding(self.detector.livelock_report(
+                    self._step - self._progress_step, live, blocked))
+                self._emit(_EV_LIVELOCK, self._step)
+                # abandon serialization so the run can drain natively
+                self._release_all_locked()
+
+    def _live(self) -> int:
+        rt = self._rt
+        if rt is None:
+            return 0
+        try:
+            return rt._live.load()
+        except Exception:
+            return 0
+
+    def _pending(self) -> int:
+        rt = self._rt
+        if rt is None:
+            return 0
+        try:
+            return rt.scheduler.pending()
+        except Exception:
+            return 0
+
+    def _runnable(self) -> list:
+        return sorted(n for n, t in self._threads.items()
+                      if not t.done and t.wait is None)
+
+    def _reeval_blocked(self) -> None:
+        # callers hold self._mx; predicates are pure reads
+        for name, t in self._threads.items():
+            w = t.wait
+            if w is None or t.poison is not None:
+                continue
+            pred = w.info.get("pred")
+            if pred is None:
+                continue
+            try:
+                sat = bool(pred())
+            except Exception:
+                sat = True  # let the owner re-run it and surface the error
+            if sat:
+                t.wait = None
+                self.detector.on_unblock(name)
+
+    def _grant(self, name: str) -> None:
+        # callers hold self._mx
+        self._current = name
+        self._threads[name].ev.set()
+
+    def _expire(self, name: str) -> None:
+        # callers hold self._mx
+        t = self._threads[name]
+        w = t.wait
+        t.wait = None
+        t.expired = True
+        self.detector.on_unblock(name)
+        if w is not None and w.kind == WAIT_PARK \
+                and not self._lost_wake_reported:
+            pending = self._pending()
+            if pending > 0:
+                self._lost_wake_reported = True
+                self._add_finding({
+                    "kind": LOST_WAKE,
+                    "message": (
+                        f"{name}'s park had to be force-expired with "
+                        f"{pending} task(s) pending and no thread runnable "
+                        "— a posted wake never reached it (the futex "
+                        "publish/re-poll protocol forbids this)"),
+                    "thread": name, "pending": pending})
+
+    def _poison(self, name: str, exc: BaseException) -> None:
+        # callers hold self._mx; the victim raises when next granted
+        t = self._threads.get(name)
+        if t is None or t.done:
+            return
+        t.poison = exc
+        if t.wait is not None:
+            t.wait = None
+            self.detector.on_unblock(name)
+
+    def _check_poison(self, ts: _TState) -> None:
+        if ts.poison is not None:
+            exc, ts.poison = ts.poison, None
+            raise exc
+
+    def _add_finding(self, verdict: dict) -> None:
+        # callers hold self._mx (or run pre-release, token-serialized)
+        d = dict(verdict)
+        self.findings.append(Finding(d.pop("kind"), d.pop("message"), **d))
+
+    def _emit(self, name: str, arg: int = 0) -> None:
+        rt = self._rt
+        if rt is not None:
+            # callers pass the module's _EV_* constants, all registered via
+            # register_event at import:  lint: ok(event-catalog)
+            rt.tracer.event(name, arg)
+
+    # ------------------------------------------------------------ release
+    def release_all(self) -> None:
+        """End the serialized schedule: wake every thread; all explorer
+        waits return DISABLED and callers resume their native paths.
+        Called by ``TaskRuntime.shutdown`` and by the watchdog."""
+        with self._mx:
+            self._release_all_locked()
+
+    def _release_all_locked(self) -> None:
+        self.enabled = False
+        for name, t in self._threads.items():
+            if t.wait is not None:
+                t.wait = None
+                self.detector.on_unblock(name)
+            t.ev.set()
+        self._reg_cv.notify_all()
+
+    # ------------------------------------------------------------- report
+    def kinds(self) -> set:
+        return {f.kind for f in self.findings}
+
+    def to_trace(self) -> dict:
+        return {"version": 1, "policy": self.policy.describe(),
+                "steps": self._step, "decisions": list(self.decisions),
+                "findings": [f.kind for f in self.findings],
+                "truncated": self.truncated}
+
+
+# ----------------------------------------------------------------- driver
+class ExploreReport:
+    """Result of :func:`explore`: per-schedule records + merged findings."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.schedules: list[dict] = []
+        self.findings: list[Finding] = []
+        self.first_failing: Optional[dict] = None
+
+    def kinds(self) -> set:
+        return {f.kind for f in self.findings}
+
+    @property
+    def n_schedules(self) -> int:
+        return len(self.schedules)
+
+    def to_json(self) -> dict:
+        return {"scenario": self.name, "schedules": self.n_schedules,
+                "findings": [f.to_dict() for f in self.findings],
+                "first_failing": self.first_failing}
+
+    def dump(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+
+def _policy_for(policy, i: int, seed: int, bound: Optional[int],
+                switch_p: float) -> SchedulePolicy:
+    if policy is None:
+        if bound is None:
+            return RandomWalkPolicy(seed=seed + i, switch_p=switch_p)
+        return PreemptionBoundedPolicy(seed=seed + i, bound=bound,
+                                       switch_p=switch_p)
+    if isinstance(policy, SchedulePolicy):
+        return policy.reset(i)
+    return policy(i)  # factory
+
+
+def explore(scenario: Callable, *, schedules: int = 25, policy=None,
+            seed: int = 0, bound: Optional[int] = 2,
+            switch_p: float = 0.25, max_steps: int = 50000,
+            watchdog: int = 3000, stop_on_finding: bool = True,
+            name: Optional[str] = None) -> ExploreReport:
+    """Run ``scenario(explorer)`` under up to ``schedules`` seeded
+    schedules. The scenario constructs its own ``TaskRuntime(...,
+    explore=explorer)``, runs a workload, and shuts it down; exceptions
+    the explorer injected (DeadlockError and friends, surfacing as task
+    errors at shutdown) are caught and recorded per schedule — the
+    findings are the product."""
+    report = ExploreReport(name or getattr(scenario, "__name__",
+                                           "scenario"))
+    for i in range(schedules):
+        pol = _policy_for(policy, i, seed, bound, switch_p)
+        exp = ScheduleExplorer(pol, max_steps=max_steps, watchdog=watchdog)
+        err = None
+        try:
+            scenario(exp)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as e:
+            err = e
+        exp.release_all()
+        exp._emit(_EV_SCHEDULE, i)
+        rec = {"schedule": i, "policy": pol.describe(),
+               "findings": [f.to_dict() for f in exp.findings],
+               "trace": exp.to_trace(),
+               "error": repr(err) if err is not None else None}
+        report.schedules.append(rec)
+        report.findings.extend(exp.findings)
+        if exp.findings:
+            if report.first_failing is None:
+                report.first_failing = rec
+            if stop_on_finding:
+                break
+    return report
+
+
+def replay(scenario: Callable, trace: dict, *, max_steps: int = 50000,
+           watchdog: int = 3000) -> ScheduleExplorer:
+    """Re-run ``scenario`` under the exact decision sequence of a recorded
+    trace; returns the explorer (inspect ``.findings``). Raises
+    ReplayDivergence when the live run stops matching the trace."""
+    exp = ScheduleExplorer(ReplayPolicy(trace), max_steps=max_steps,
+                           watchdog=watchdog)
+    try:
+        scenario(exp)
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except ReplayDivergence:
+        exp.release_all()
+        raise
+    except BaseException:
+        pass  # injected errors: the findings are the product
+    exp.release_all()
+    exp._emit(_EV_REPLAY, 0)
+    return exp

@@ -31,9 +31,11 @@ rule catalog with the incident history lives in docs/SANITIZER.md):
 
 ``task-retention``
     A ``spawn(...)`` result stored anywhere that outlives the local frame
-    (attribute, subscript, container ``append``/``add``/``put``) must be
-    spawned with ``retain=True`` or ``handle=True`` — a bare pooled Task
-    held across its completion silently becomes a different logical task.
+    (attribute, subscript, container ``append``/``add``/``put``, or a
+    ``@dataclass`` constructor field — the instance carries the task out
+    of the frame) must be spawned with ``retain=True`` or ``handle=True``
+    — a bare pooled Task held across its completion silently becomes a
+    different logical task.
 
 Suppression: append ``# lint: ok(rule-id)`` to the flagged line (or the
 line above) with a short justification after it.
@@ -137,6 +139,24 @@ class _FileLinter(ast.NodeVisitor):
             self.norm.endswith(("core/asm.py",))
         self.is_asm = self.norm.endswith("core/asm.py")
         self._class_stack: list = []
+        self._dataclasses = self._collect_dataclasses(tree)
+
+    @staticmethod
+    def _collect_dataclasses(tree: ast.Module) -> set:
+        """Names of @dataclass-decorated classes in this module: their
+        constructors store every argument in a field, so passing a task
+        into one is a frame escape."""
+        out: set = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                name = d.attr if isinstance(d, ast.Attribute) else \
+                    getattr(d, "id", None)
+                if name == "dataclass":
+                    out.add(node.name)
+        return out
 
     def emit(self, node: ast.AST, rule: str, message: str):
         self.findings.append(
@@ -248,8 +268,8 @@ class _FileLinter(ast.NodeVisitor):
                                   "handle=True — the pooled Task may be "
                                   "recycled into a different logical "
                                   "task")
-        if not tainted:
-            return
+        # no early-out on empty taint: an unretained spawn() passed inline
+        # into a dataclass constructor escapes without ever naming a local
         for node in ast.walk(fn_node):
             if isinstance(node, ast.Assign) and \
                     isinstance(node.value, ast.Name) and \
@@ -271,6 +291,20 @@ class _FileLinter(ast.NodeVisitor):
                                   f"{arg.id!r} escapes via "
                                   f".{node.func.attr}(); spawn with "
                                   "retain=True/handle=True")
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in self._dataclasses:
+                for arg in list(node.args) + \
+                        [kw.value for kw in node.keywords]:
+                    if (isinstance(arg, ast.Name) and arg.id in tainted) \
+                            or self._is_unretained_spawn(arg):
+                        held = arg.id if isinstance(arg, ast.Name) \
+                            else "spawn() result"
+                        self.emit(node, "task-retention",
+                                  f"unretained {held!s} escapes into "
+                                  f"dataclass {node.func.id} field — the "
+                                  "instance outlives the frame; spawn "
+                                  "with retain=True/handle=True")
 
     @staticmethod
     def _is_unretained_spawn(value) -> bool:

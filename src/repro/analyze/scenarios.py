@@ -1,0 +1,363 @@
+"""taskcheck scenario registry: clean workloads + seeded bug classes.
+
+Two collections, both driven by :func:`repro.analyze.explore.explore`:
+
+* ``CLEAN`` — well-synchronized workloads over the real runtime. Exploring
+  them (preemption bound 2, bounded schedule budget) must produce ZERO
+  findings; CI's explore-smoke runs them as the false-positive guard.
+* ``SEEDED`` — one scenario per bug class the explorer is designed to
+  catch, each with the finding kind(s) it must surface and the explore()
+  budget known to surface it. The deliberate bugs live in scenario-local
+  task bodies or in tiny subclasses (:class:`ParkAfterWake`) — core/ stays
+  correct.
+
+Every scenario takes the :class:`~repro.analyze.explore.ScheduleExplorer`
+and is responsible for building, driving and shutting down its own
+``TaskRuntime(explore=exp)``; shutdown uses ``wait=False`` where a found
+bug legitimately prevents quiescence.
+"""
+from __future__ import annotations
+
+from repro.analyze.deadlock import DEADLOCK_CYCLE, LIVELOCK, WAIT_SPSC
+from repro.analyze.explore import checkpoint, current_name
+from repro.analyze.tsan import LOST_WAKE
+from repro.core.locks import TicketLock
+from repro.core.parking import ParkingLot
+from repro.core.runtime import TaskRuntime, current_task
+
+
+# ------------------------------------------------------------------ clean
+def clean_spawn_barrier(exp):
+    """Fan-out of independent tasks + barrier: nothing to find."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        out = []
+        for i in range(8):
+            rt.spawn(lambda i=i: out.append(i), name=f"t{i}")
+        rt.barrier()
+        assert sorted(out) == list(range(8)), out
+    finally:
+        rt.shutdown()
+
+
+def clean_lock_order(exp):
+    """Two tasks acquiring two locks in the SAME order: no inversion."""
+    a, b = TicketLock(), TicketLock()
+    exp.watch_lock(a, "A")
+    exp.watch_lock(b, "B")
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        acc = []
+
+        def body(tag):
+            a.lock()
+            try:
+                checkpoint()
+                b.lock()
+                try:
+                    acc.append(tag)
+                finally:
+                    b.unlock()
+            finally:
+                a.unlock()
+
+        rt.spawn(body, ("x",))
+        rt.spawn(body, ("y",))
+        rt.barrier()
+        assert sorted(acc) == ["x", "y"], acc
+    finally:
+        rt.shutdown()
+
+
+def clean_group_tree(exp):
+    """Nested spawns into a TaskGroup awaited from OUTSIDE: legal."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        done = []
+        with rt.task_group("tree") as g:
+            def parent(i):
+                done.append(("p", i))
+                g.spawn(lambda i=i: done.append(("c", i)), name=f"c{i}",
+                        parent=current_task())
+            for i in range(3):
+                g.spawn(parent, (i,), name=f"p{i}")
+        assert len(done) == 6, done
+        rt.barrier()
+    finally:
+        rt.shutdown()
+
+
+def clean_parking_churn(exp):
+    """Spawn bursts separated by quiescence: workers park and wake across
+    the POLLING->PARKED protocol repeatedly."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        for _ in range(3):
+            out = []
+            for i in range(4):
+                rt.spawn(lambda i=i: out.append(i))
+            rt.barrier()
+            assert sorted(out) == list(range(4)), out
+    finally:
+        rt.shutdown()
+
+
+def clean_taskwait_chain(exp):
+    """taskwait on retained tasks + a dependency chain through one key."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        t = rt.spawn(lambda: 21, retain=True, name="a")
+        assert rt.taskwait(t)
+        assert t.result == 21
+        box = []
+        for i in range(5):
+            rt.spawn(lambda i=i: box.append(i), rw=["k"], name=f"d{i}")
+        rt.barrier()
+        assert box == list(range(5)), box  # rw chain serializes in order
+    finally:
+        rt.shutdown()
+
+
+def clean_spsc_pressure(exp):
+    """Tiny SPSC insertion buffers: the producer hits the full-buffer
+    backoff (sched.add-full yield point / DTLock fallback) constantly."""
+    rt = TaskRuntime(n_workers=2, explore=exp, spsc_capacity=2)
+    rt.start()
+    try:
+        out = []
+        for i in range(12):
+            rt.spawn(lambda i=i: out.append(i))
+        rt.barrier()
+        assert sorted(out) == list(range(12)), out
+    finally:
+        rt.shutdown()
+
+
+def clean_eventcount_parking(exp):
+    """The PR-1 eventcount ablation under exploration."""
+    rt = TaskRuntime(n_workers=2, explore=exp, parking="eventcount")
+    rt.start()
+    try:
+        out = []
+        for _ in range(2):
+            for i in range(4):
+                rt.spawn(lambda i=i: out.append(i))
+            rt.barrier()
+        assert len(out) == 8, out
+    finally:
+        rt.shutdown()
+
+
+def clean_work_stealing(exp):
+    """Per-worker deques + stealing: every MutexLock dance serialized."""
+    rt = TaskRuntime(n_workers=2, explore=exp, scheduler="work-stealing")
+    rt.start()
+    try:
+        out = []
+        for i in range(8):
+            rt.spawn(lambda i=i: out.append(i))
+        rt.barrier()
+        assert sorted(out) == list(range(8)), out
+    finally:
+        rt.shutdown()
+
+
+def clean_group_cancel(exp):
+    """TaskGroup cancellation mid-flight: admission refusal + drop paths."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        g = rt.task_group("c", cancel_on_error=False)
+        ran = []
+        for i in range(4):
+            g.spawn(lambda i=i: ran.append(i), name=f"g{i}")
+        g.cancel()
+        g.wait(raise_errors=False)
+        rt.barrier()
+        assert len(ran) <= 4
+    finally:
+        rt.shutdown()
+
+
+# ----------------------------------------------------------- seeded bugs
+def bug_abba(exp):
+    """ABBA lock inversion: t1 takes A then B, t2 takes B then A. A
+    preemption between the two acquisitions wedges both workers; the
+    static order graph flags the inversion even on schedules that happen
+    not to wedge."""
+    a, b = TicketLock(), TicketLock()
+    exp.watch_lock(a, "A")
+    exp.watch_lock(b, "B")
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        def t1():
+            a.lock()  # deliberate bug:  lint: ok(lock-try-finally)
+            checkpoint()
+            b.lock()  # deliberate bug:  lint: ok(lock-try-finally)
+            b.unlock()
+            a.unlock()
+
+        def t2():
+            b.lock()  # deliberate bug:  lint: ok(lock-try-finally)
+            checkpoint()
+            a.lock()  # deliberate bug:  lint: ok(lock-try-finally)
+            a.unlock()
+            b.unlock()
+
+        rt.spawn(t1, name="t1")
+        rt.spawn(t2, name="t2")
+        rt.barrier(timeout=5)
+    finally:
+        rt.shutdown(wait=False)
+
+
+class ParkAfterWake(ParkingLot):
+    """DELIBERATE BUG: re-reads the wake epoch at park time instead of
+    using the token captured by ``begin_poll``. A wake posted in the
+    POLLING->PARKED window (exactly what the futex publish/re-poll
+    protocol exists to tolerate) is silently consumed and the worker
+    sleeps through it with work pending — the classic lost wake."""
+
+    def park(self, wid: int, token: int, timeout: float) -> bool:
+        token = self.slots[wid].seq  # BUG: drops the begin_poll epoch
+        return super().park(wid, token, timeout)
+
+
+def _lost_wake_scenario(parking_cls):
+    def scenario(exp):
+        rt = TaskRuntime(n_workers=1, explore=exp)
+        # swap the parking implementation in before any worker starts
+        rt._parking = parking_cls(1)
+        rt._parking.exp = exp
+        rt.start()
+        try:
+            out = []
+            rt.spawn(lambda: out.append(1))
+            rt.barrier()
+            # the worker is now heading back to park; a second spawn landing
+            # in its POLLING window posts the wake the buggy park drops
+            rt.spawn(lambda: out.append(2))
+            rt.barrier(timeout=5)
+        finally:
+            rt.shutdown(wait=False)
+    return scenario
+
+
+bug_lost_wake = _lost_wake_scenario(ParkAfterWake)
+bug_lost_wake.__name__ = "bug_lost_wake"
+control_lost_wake = _lost_wake_scenario(ParkingLot)
+control_lost_wake.__name__ = "control_lost_wake"
+
+
+def bug_group_self_wait(exp):
+    """A group member waits on its OWN group: the group can only drain
+    once the waiting task finishes — a taskwait self-cycle the detector
+    reports immediately at block time."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        g = rt.task_group("self")
+
+        def member():
+            g.wait(timeout=5)  # deliberate bug: waits for itself
+
+        g.spawn(member, name="m")
+        g.wait(timeout=5)
+    finally:
+        rt.shutdown(wait=False)
+
+
+def bug_spsc_mutual(exp):
+    """Producer/consumer mutual wait in the full-SPSC shape: each side
+    blocks until the OTHER makes room/progress, declared via wait-for
+    providers — the detector closes the two-thread cycle."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        def body():
+            me = current_name()
+            other = "w1" if me == "w0" else "w0"
+            # deliberate bug: unconditional wait for the peer worker
+            exp.wait_until(lambda: False, kind=WAIT_SPSC,
+                           label=f"spsc-full[{me}]", provider=other)
+
+        rt.spawn(body, name="side-a")
+        rt.spawn(body, name="side-b")
+        rt.barrier(timeout=5)
+    finally:
+        rt.shutdown(wait=False)
+
+
+def bug_convoy(exp):
+    """Spin-until-flag convoy on a single worker: the spinner yields
+    forever while the task that would set its flag sits queued behind it
+    (the PR-6 sleep(0) convoy signature) — no task finalizes, the
+    no-progress watchdog condemns the schedule as a livelock."""
+    rt = TaskRuntime(n_workers=1, explore=exp)
+    rt.start()
+    try:
+        flag = []
+
+        def spinner():
+            # bounded so the post-finding native drain terminates
+            for _ in range(200_000):
+                if flag:
+                    return
+                checkpoint()
+
+        rt.spawn(spinner, name="spinner")
+        rt.spawn(lambda: flag.append(1), name="setter")
+        rt.barrier(timeout=30)
+    finally:
+        rt.shutdown(wait=False)
+
+
+# --------------------------------------------------------------- registry
+CLEAN = {
+    "spawn-barrier": clean_spawn_barrier,
+    "lock-order": clean_lock_order,
+    "group-tree": clean_group_tree,
+    "parking-churn": clean_parking_churn,
+    "taskwait-chain": clean_taskwait_chain,
+    "spsc-pressure": clean_spsc_pressure,
+    "eventcount-parking": clean_eventcount_parking,
+    "work-stealing": clean_work_stealing,
+    "group-cancel": clean_group_cancel,
+}
+
+# name -> {scenario, expect (kinds that must appear), explore kwargs}
+SEEDED = {
+    "abba": {
+        "scenario": bug_abba,
+        "expect": {DEADLOCK_CYCLE},
+        "explore": {"schedules": 40, "seed": 0, "bound": 2},
+    },
+    "lost-wake": {
+        "scenario": bug_lost_wake,
+        "expect": {LOST_WAKE},
+        "explore": {"schedules": 40, "seed": 0, "bound": None,
+                    "switch_p": 0.4},
+    },
+    "group-self-wait": {
+        "scenario": bug_group_self_wait,
+        "expect": {DEADLOCK_CYCLE},
+        "explore": {"schedules": 10, "seed": 0, "bound": 2},
+    },
+    "spsc-mutual": {
+        "scenario": bug_spsc_mutual,
+        "expect": {DEADLOCK_CYCLE},
+        "explore": {"schedules": 25, "seed": 0, "bound": 2},
+    },
+    "convoy": {
+        "scenario": bug_convoy,
+        "expect": {LIVELOCK},
+        "explore": {"schedules": 5, "seed": 0, "bound": 2,
+                    "watchdog": 400},
+    },
+}

@@ -66,6 +66,7 @@ from typing import Optional
 
 from repro.core.asm import (CHILD_DONE, COMMUTATIVE, READ, READ_SAT,
                             REDUCTION, RED_SAT, WRITE_SAT, domain_key)
+from repro.analyze.deadlock import LockOrderGraph
 
 # message bits that constitute a happens-before edge sender -> receiver
 _HB_BITS = READ_SAT | WRITE_SAT | RED_SAT | CHILD_DONE
@@ -206,10 +207,9 @@ class TaskSanitizer:
         self._deps_mode = getattr(getattr(runtime, "deps", None), "name",
                                   "waitfree")
         self._release_clocks: dict = {}  # locked mode: domain_key -> clock
-        # lock-order graph over watched lock instances
-        self._lock_edges: dict = {}      # id(lock) -> set(id(lock))
-        self._lock_names: dict = {}      # id(lock) -> label
-        self._lock_cycles_seen: set = set()
+        # acquisition-order graph over watched lock instances (shared
+        # implementation with the deadlock detector, see analyze/deadlock)
+        self.lock_graph = LockOrderGraph()
         # lost-wake detector state
         self._armed_lost_wake = False
         self._lost_wake_reported = False
@@ -472,6 +472,21 @@ class TaskSanitizer:
             src = ctx.current.clock if ctx.current is not None else ctx.clock
             group._san_cancel_clock = dict(src)
 
+    def on_collect(self) -> None:
+        """``runtime.collect()`` requires quiescence (live == 0): every
+        access of every prior epoch has fully finalized before it runs, and
+        everything spawned afterwards is ordered after it by program order.
+        Model that as a full happens-before barrier by retiring the
+        per-address shadow state and release clocks — without this, a write
+        whose lineage lived under a *child* domain key (the parent never
+        declared the address, so no release clock exists under the root
+        key) looks concurrent with the first post-collect root access and
+        reports a spurious race."""
+        with self._lock:
+            self._shadow.clear()
+            self._active.clear()
+            self._release_clocks.clear()
+
     # ------------------------------------------------------------ parking
     def on_enqueue_outcome(self, woken: bool, n_idle: int,
                            pending: int) -> None:
@@ -516,15 +531,25 @@ class TaskSanitizer:
     def watch_lock(self, lock, name: Optional[str] = None) -> None:
         """Enable acquire/release monitoring on one lock instance."""
         lock._monitor = self
-        self._lock_names[id(lock)] = name or type(lock).__name__
+        self.lock_graph.name_lock(lock, name)
 
     def on_acquire(self, lock) -> None:
         held = self._ctx().held
         if held:
             with self._lock:
                 for h in held:
-                    if h is not lock:
-                        self._add_lock_edge(h, lock)
+                    if h is lock:
+                        continue
+                    cyc = self.lock_graph.add_edge(h, lock)
+                    if cyc is not None:
+                        na, nb = cyc
+                        self._finding(
+                            LOCK_ORDER,
+                            f"lock-order inversion: {na} -> {nb} acquired "
+                            f"here, but {nb} ->* {na} was observed earlier "
+                            "— the acquisition-order graph has a cycle "
+                            "(deadlock candidate)",
+                            locks=sorted((na, nb)))
         held.append(lock)
 
     def on_release(self, lock) -> None:
@@ -536,39 +561,9 @@ class TaskSanitizer:
         with self._lock:
             self._finding(
                 LOCK_UNHELD,
-                f"{self._lock_names.get(id(lock), 'lock')} released by a "
+                f"{self.lock_graph.label(lock)} released by a "
                 "thread that does not hold it",
-                lock=self._lock_names.get(id(lock)))
-
-    def _add_lock_edge(self, a, b) -> None:
-        # callers hold self._lock
-        succs = self._lock_edges.setdefault(id(a), set())
-        if id(b) in succs:
-            return
-        succs.add(id(b))
-        # new edge a->b: a path b ->* a now closes a cycle
-        stack, seen = [id(b)], set()
-        while stack:
-            n = stack.pop()
-            if n == id(a):
-                key = frozenset((id(a), id(b)))
-                if key in self._lock_cycles_seen:
-                    return
-                self._lock_cycles_seen.add(key)
-                na = self._lock_names.get(id(a), "lock-a")
-                nb = self._lock_names.get(id(b), "lock-b")
-                self._finding(
-                    LOCK_ORDER,
-                    f"lock-order inversion: {na} -> {nb} acquired here, "
-                    f"but {nb} ->* {na} was observed earlier — the "
-                    "acquisition-order graph has a cycle (deadlock "
-                    "candidate)",
-                    locks=sorted((na, nb)))
-                return
-            if n in seen:
-                continue
-            seen.add(n)
-            stack.extend(self._lock_edges.get(n, ()))
+                lock=self.lock_graph.label(lock))
 
     # ------------------------------------------------------------ checks
     def _check_access_start(self, node: _Node, acc) -> None:

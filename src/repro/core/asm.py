@@ -120,7 +120,7 @@ class MailBox:
     objects are amortized across all tasks of a lineage instead of being
     allocated per delivery."""
 
-    __slots__ = ("_q", "on_ready", "_free", "san")
+    __slots__ = ("_q", "on_ready", "_free", "san", "exp")
 
     _MAX_FREE = 64  # deeper backlogs fall back to the allocator
 
@@ -129,6 +129,7 @@ class MailBox:
         self.on_ready = on_ready  # callback(access) when access satisfied
         self._free: list = []
         self.san = None  # tasksan hook (TaskRuntime._mailbox tags leases)
+        self.exp = None  # taskcheck explorer hook (tagged per lease too)
 
     def post(self, msg: DataAccessMessage):
         self._q.append(msg)
@@ -161,6 +162,11 @@ class MailBox:
 
     # ------------------------------------------------------------------
     def _deliver(self, msg: DataAccessMessage):
+        exp = self.exp
+        if exp is not None:
+            # message delivery is the wait-free protocol's only
+            # synchronization point — the prime interleaving to explore
+            exp.yield_point("asm.deliver")
         san = self.san
         if san is not None:
             # happens-before join must precede the transition that may make

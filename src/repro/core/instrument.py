@@ -46,6 +46,12 @@ EVENTS = {
     "group.cancel": 21,     # TaskGroup.cancel() (arg: outstanding count)
     "sched.add_fallback": 22,  # producer blocked as DTLock ticket waiter
     "san.violation": 23,    # tasksan finding recorded (arg: running total)
+    "explore.switch": 24,   # taskcheck: policy preempted the running thread
+    "explore.expire": 25,   # taskcheck: policy force-expired a timed wait
+    "explore.schedule": 26,  # taskcheck: one explored schedule finished
+    "explore.replay": 27,   # taskcheck: a recorded trace was replayed
+    "deadlock.cycle": 28,   # taskcheck: wait-for / lock-order cycle found
+    "deadlock.livelock": 29,  # taskcheck: no-progress watchdog fired
 }
 
 

@@ -49,9 +49,15 @@ class _Monitored:
     watch_lock`` overrides it per *instance*, so only watched locks pay for
     the callbacks. The lock()/unlock() fast paths inline the test instead
     of calling these helpers — a method call per acquire would be the
-    dominant disabled-sanitizer cost."""
+    dominant disabled-sanitizer cost.
+
+    ``_explorer`` (taskcheck's ScheduleExplorer, set per instance by its
+    ``watch_lock``) follows the same pattern, but its checks sit *inside*
+    the contended wait loops — entered only after a failed first attempt —
+    so the uncontended fast path pays nothing for it."""
 
     _monitor = None
+    _explorer = None
 
     def _acquired(self):
         m = self._monitor
@@ -71,7 +77,15 @@ class MutexLock(_Monitored):
         self._lk = threading.Lock()
 
     def lock(self):
-        self._lk.acquire()
+        exp = self._explorer
+        if exp is None:
+            self._lk.acquire()
+        elif not self._lk.acquire(blocking=False):
+            # contended under exploration: wait serialized (a blocking
+            # acquire would wedge the whole serialized world); mutex_wait
+            # claims the lock itself on success
+            if not exp.mutex_wait(self):
+                self._lk.acquire()
         m = self._monitor
         if m is not None:
             m.on_acquire(self)
@@ -104,6 +118,11 @@ class TicketLock(_Monitored):
             s = self._serving.load()
             if s == t:
                 break
+            exp = self._explorer
+            if exp is not None and \
+                    exp.lock_wait(self,
+                                  lambda: self._serving.load() == t):
+                continue
             spins += 1
             _backoff(spins, t - s)
         m = self._monitor
@@ -146,6 +165,10 @@ class PTLock(_Monitored):
         slot = self._waitq[ticket % self.size]
         spins = 0
         while slot.load() < ticket:
+            exp = self._explorer
+            if exp is not None and \
+                    exp.lock_wait(self, lambda: slot.load() >= ticket):
+                continue
             spins += 1
             # _tail (next ticket to grant) is owner-written; the racy read
             # is only a position hint — a stale value costs one extra yield

@@ -60,6 +60,7 @@ class ParkingLot:
 
     name = "slots"
     san = None  # tasksan hook; instance attr when installed
+    exp = None  # taskcheck explorer hook; instance attr when installed
 
     def __init__(self, n_workers: int, n_numa: int = 1):
         n_numa = max(1, n_numa)
@@ -93,6 +94,24 @@ class ParkingLot:
         epoch moved past ``token``)."""
         s = self.slots[wid]
         self.parks.fetch_add(1)
+        exp = self.exp
+        if exp is not None:
+            # under exploration, park in the serialized world instead of on
+            # the condition: timed, so the schedule policy (never the wall
+            # clock) decides when an unwoken park expires
+            with s.cond:
+                if s.seq == token:
+                    s.state = PARKED
+            st = exp.wait_until(lambda: s.seq != token, kind="park",
+                                resource=("park", wid),
+                                label=f"park[w{wid}]", timed=True)
+            if st != "disabled":
+                with s.cond:
+                    woken = s.seq != token
+                    s.state = RUNNING
+                    s.pending_wake = False
+                self._n_idle.fetch_add(-1)
+                return woken
         with s.cond:
             if s.seq == token:
                 s.state = PARKED
@@ -194,6 +213,7 @@ class EventcountParking:
 
     name = "eventcount"
     san = None  # tasksan hook (global eventcount has no per-wid wake edge)
+    exp = None  # taskcheck explorer hook; instance attr when installed
 
     def __init__(self, n_workers: int, n_numa: int = 1):
         self._cond = threading.Condition(threading.Lock())
@@ -213,6 +233,16 @@ class EventcountParking:
 
     def park(self, wid: int, token: int, timeout: float) -> bool:
         self.parks.fetch_add(1)
+        exp = self.exp
+        if exp is not None:
+            st = exp.wait_until(lambda: self._seq != token, kind="park",
+                                resource=("park", wid),
+                                label=f"park[w{wid}]", timed=True)
+            if st != "disabled":
+                with self._cond:
+                    woken = self._seq != token
+                    self._n_idle -= 1
+                return woken
         with self._cond:
             if self._seq == token:
                 self._cond.wait(timeout)

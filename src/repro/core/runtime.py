@@ -227,6 +227,19 @@ class TaskGroup:
         """Block until every task spawned through this group fully finished
         (subtrees included). Returns False on timeout. Re-raises the first
         collected task error (clearing the list) when raise_errors is set."""
+        exp = self._rt._explorer
+        if exp is not None:
+            st = exp.wait_until(
+                lambda: self._outstanding.load() == 0, kind="group-wait",
+                label=f"group.wait({self.name or 'anon'})", group=self,
+                task=current_task(), timed=timeout is not None)
+            if st != "disabled":
+                if self._outstanding.load() != 0:
+                    return False
+                if raise_errors:
+                    self.raise_errors()
+                self._san_joined()
+                return True
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             budget = None if deadline is None else deadline - time.monotonic()
@@ -308,7 +321,8 @@ class TaskRuntime:
                  policy: str = "fifo", n_numa: int = 1,
                  tracer: Optional[Tracer] = None,
                  spsc_capacity: int = 256, parking: str = "slots",
-                 sanitize: Union[bool, str, None] = None):
+                 sanitize: Union[bool, str, None] = None,
+                 explore=None):
         self.n_workers = n_workers
         self.tracer = tracer or Tracer(enabled=False)
         self.pool = TaskPool(enabled=use_pool)
@@ -369,6 +383,22 @@ class TaskRuntime:
             self.san = TaskSanitizer(
                 raise_on_shutdown=(sanitize != "report"))
             self.san.install(self)
+        # taskcheck (repro.analyze.explore): explore=<ScheduleExplorer|
+        # SchedulePolicy|True> serializes every runtime thread behind the
+        # explorer's token and systematically explores interleavings. Off
+        # (None on every hook site) costs one attribute check per site,
+        # and the lock hooks only exist inside contended wait loops.
+        self._explorer = None
+        if explore is not None and explore is not False:
+            from repro.analyze.explore import (ScheduleExplorer,
+                                               SchedulePolicy)
+            if isinstance(explore, ScheduleExplorer):
+                self._explorer = explore
+            elif isinstance(explore, SchedulePolicy):
+                self._explorer = ScheduleExplorer(explore)
+            else:  # explore=True: default preemption-bounded policy
+                self._explorer = ScheduleExplorer()
+            self._explorer.install(self)
 
     # ---------------------------------------------------------------- infra
     def _mailbox(self) -> MailBox:
@@ -381,6 +411,7 @@ class TaskRuntime:
         if lease is None:
             lease = _MailboxLease(self._mb_pool)
             lease.mb.san = self.san  # boxes circulate within one runtime
+            lease.mb.exp = self._explorer
             self._mailboxes.lease = lease
         return lease.mb
 
@@ -392,17 +423,29 @@ class TaskRuntime:
             return self
         self._started = True
         self._stop = False
+        exp = self._explorer
+        if exp is not None:
+            # the caller becomes "main" in the serialized world; it takes
+            # the token first, so workers block until it yields
+            exp.register("main")
         for wid in range(self.n_workers):
             t = threading.Thread(target=self._worker, args=(wid,),
                                  name=f"repro-worker-{wid}", daemon=True)
             t.start()
             self._threads.append(t)
+        if exp is not None:
+            exp.await_threads([f"w{w}" for w in range(self.n_workers)])
         return self
 
     def shutdown(self, wait: bool = True):
         if wait:
             self.barrier()
         self._stop = True
+        exp = self._explorer
+        if exp is not None:
+            # end of the schedule: stop serializing so workers can observe
+            # _stop and exit natively
+            exp.release_all()
         self._parking.wake_all()
         for t in self._threads:
             t.join(timeout=5)
@@ -426,6 +469,12 @@ class TaskRuntime:
         (single-creator programs between phases). No-op otherwise."""
         if not self._quiescent.is_set():
             return 0
+        san = self.san
+        if san is not None:
+            # quiescence at collect() is a full happens-before barrier:
+            # retire the pre-collect shadow state so lineage reuse after
+            # collection is not reported against it
+            san.on_collect()
         return self.deps.collect()
 
     def __enter__(self):
@@ -495,6 +544,11 @@ class TaskRuntime:
 
     def _task_ready(self, task: Task):
         task.ready_ns = time.monotonic_ns()
+        exp = self._explorer
+        if exp is not None:
+            # enqueue is a decision point: the explorer may run a consumer
+            # (or another producer) before this task becomes visible
+            exp.yield_point("task.ready")
         san = self.san
         if san is not None:
             # locked-deps release joins must land before a worker can pick
@@ -528,6 +582,9 @@ class TaskRuntime:
             # before the (deferred) unregister: locked-mode release clocks
             # must be published before successors can become ready
             san.on_finalize(task)
+        exp = self._explorer
+        if exp is not None:
+            exp.on_progress()  # finalize resets the no-progress watchdog
         if self._defer_unregister:
             # locked deps: conservative nesting — successors become ready
             # only once the full subtree completed
@@ -627,9 +684,14 @@ class TaskRuntime:
     def _worker(self, wid: int):
         _current_task.wid = wid
         parking = self._parking
+        exp = self._explorer
+        if exp is not None:
+            exp.register(f"w{wid}")
         spins = 0
         n_timeouts = 0
         while not self._stop:
+            if exp is not None:
+                exp.yield_point("worker.dequeue")
             task = self.scheduler.get_ready_task(wid)
             if task is not None:
                 spins = 0
@@ -637,7 +699,11 @@ class TaskRuntime:
                 self._run_task(task, wid)
                 continue
             spins += 1
-            if spins < _PARK_AFTER_SPINS:
+            if spins < _PARK_AFTER_SPINS and exp is None:
+                # under exploration the idle spin phase is skipped: the
+                # iterations are schedule-equivalent (pure re-polls), and
+                # collapsing them keeps the POLLING->park window reachable
+                # within a bounded decision budget
                 self.tracer.event("worker.idle", wid)
                 time.sleep(0)  # yield once before escalating to a park
                 continue
@@ -659,6 +725,10 @@ class TaskRuntime:
             if self._stop:
                 parking.cancel_poll(wid)
                 break
+            if exp is not None:
+                # the POLLING->PARKED window: a wake posted right here is
+                # exactly what the futex re-poll protocol must tolerate
+                exp.yield_point("worker.prepark")
             self.tracer.event("worker.park", wid)
             san = self.san
             if parking.park(wid, token, self._park_timeout(n_timeouts)):
@@ -671,6 +741,8 @@ class TaskRuntime:
                 spins = _PARK_AFTER_SPINS  # timed out: skip the spin phase
                 if san is not None:
                     san.on_park_timeout(wid, self.scheduler.pending())
+        if exp is not None:
+            exp.thread_exit()
 
     # ---------------------------------------------------------------- sync
     def taskwait(self, task: Union[Task, TaskRef],
@@ -702,6 +774,16 @@ class TaskRuntime:
         ev = t.wait_handle()
         if finished():  # completion may have raced wait_handle installation
             return True
+        exp = self._explorer
+        if exp is not None:
+            # serialized wait: the policy (not the wall clock) decides when
+            # a timed wait expires; target/task feed the self-cycle check
+            st = exp.wait_until(finished, kind="taskwait",
+                                label=f"taskwait({t.name or t.task_id})",
+                                task=current_task(), target=t,
+                                timed=timeout is not None)
+            if st != "disabled":
+                return finished()
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             slice_s = _PARK_TIMEOUT_S
@@ -718,6 +800,13 @@ class TaskRuntime:
 
     def barrier(self, timeout: Optional[float] = None) -> bool:
         """Wait until all spawned tasks (incl. nested) fully finished."""
+        exp = self._explorer
+        if exp is not None:
+            st = exp.wait_until(self._quiescent.is_set, kind="barrier",
+                                label="barrier", task=current_task(),
+                                timed=timeout is not None)
+            if st != "disabled":
+                return self._quiescent.is_set()
         return self._quiescent.wait(timeout)
 
     # ---------------------------------------------------------------- stats

@@ -80,6 +80,8 @@ class SyncScheduler:
     livelocking behind a busy lock owner that never drains its buffer.
     """
 
+    _explorer = None  # taskcheck hook; instance attr when installed
+
     def __init__(self, n_workers: int, policy: str = "fifo",
                  n_numa: int = 1, spsc_capacity: int = 256,
                  instrument=None, max_add_spins: int = 64):
@@ -129,7 +131,13 @@ class SyncScheduler:
                 self._lock.lock()
                 self._insert_direct(task)
                 return
-            spin()
+            exp = self._explorer
+            if exp is not None:
+                # full-SPSC backoff is a scheduling decision point: let the
+                # explorer run the consumer (or surface the mutual wait)
+                exp.yield_point("sched.add-full")
+            else:
+                spin()
 
     def _insert_direct(self, task):
         """Called with the DTLock held: drain buffers, insert the task into

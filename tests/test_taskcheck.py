@@ -1,0 +1,184 @@
+"""taskcheck: the deterministic schedule explorer must FIND every seeded
+bug class within its registered budget, REPLAY each find bit-for-bit from
+the recorded decision trace, and stay SILENT on clean workloads explored
+at preemption bound 2 (the false-positive gauntlet).
+
+The seeded scenarios live in repro.analyze.scenarios (deliberate bugs in
+scenario-local bodies / tiny subclasses, never in core/); these tests are
+the acceptance gate for the registry + the explorer machinery itself
+(policies, trace recording, divergence detection, deadlock verdicts).
+"""
+import pytest
+
+from repro.analyze.deadlock import (DEADLOCK_CYCLE, LIVELOCK,
+                                    DeadlockDetector, LockOrderGraph,
+                                    WaitEdge)
+from repro.analyze.explore import (PreemptionBoundedPolicy,
+                                   RandomWalkPolicy, ReplayDivergence,
+                                   ReplayPolicy, explore, replay)
+from repro.analyze.scenarios import CLEAN, SEEDED, control_lost_wake
+from repro.analyze.tsan import LOST_WAKE
+
+
+def _find(name):
+    spec = SEEDED[name]
+    rep = explore(spec["scenario"], name=name, **spec["explore"])
+    assert spec["expect"] <= rep.kinds(), (
+        f"{name}: expected {spec['expect']} within "
+        f"{spec['explore']['schedules']} schedules, got {rep.kinds()} "
+        f"({rep.n_schedules} run)")
+    return spec, rep
+
+
+def _assert_replays(spec, rep):
+    trace = rep.first_failing["trace"]
+    for _ in range(2):  # twice: determinism, not one-off luck
+        exp = replay(spec["scenario"], trace)
+        assert spec["expect"] <= exp.kinds(), exp.findings
+
+
+# ------------------------------------------------------- seeded bug classes
+def test_finds_abba_lock_inversion():
+    spec, rep = _find("abba")
+    assert DEADLOCK_CYCLE in rep.kinds()
+    msgs = " | ".join(f.message for f in rep.findings)
+    assert "A" in msgs and "B" in msgs
+    _assert_replays(spec, rep)
+
+
+def test_finds_lost_wake_park():
+    spec, rep = _find("lost-wake")
+    assert LOST_WAKE in rep.kinds()
+    f = next(f for f in rep.findings if f.kind == LOST_WAKE)
+    assert f.details.get("pending", 0) >= 1
+    _assert_replays(spec, rep)
+
+
+def test_lost_wake_control_is_clean():
+    # identical workload with the CORRECT parking protocol: the explorer
+    # must not cry lost-wake on legitimately-expiring park timeouts
+    kw = SEEDED["lost-wake"]["explore"]
+    rep = explore(control_lost_wake, name="control", **kw)
+    assert rep.kinds() == set(), rep.findings
+
+
+def test_finds_group_self_wait_cycle():
+    spec, rep = _find("group-self-wait")
+    f = next(f for f in rep.findings if f.kind == DEADLOCK_CYCLE)
+    assert "self-cycle" in f.message
+    _assert_replays(spec, rep)
+
+
+def test_finds_spsc_mutual_wait_cycle():
+    spec, rep = _find("spsc-mutual")
+    f = next(f for f in rep.findings if f.kind == DEADLOCK_CYCLE)
+    assert "wait-for cycle" in f.message
+    assert "spsc-full" in f.message
+    _assert_replays(spec, rep)
+
+
+def test_finds_convoy_livelock():
+    spec, rep = _find("convoy")
+    f = next(f for f in rep.findings if f.kind == LIVELOCK)
+    assert f.details.get("live", 0) >= 1
+    _assert_replays(spec, rep)
+
+
+# ------------------------------------------------------------ clean gauntlet
+@pytest.mark.parametrize("name", sorted(CLEAN))
+def test_clean_scenarios_have_no_findings(name):
+    rep = explore(CLEAN[name], name=name, schedules=10, seed=0, bound=2)
+    assert rep.kinds() == set(), rep.findings
+    errs = [s["error"] for s in rep.schedules if s["error"]]
+    assert not errs, errs
+
+
+@pytest.mark.parametrize("name", sorted(CLEAN))
+def test_clean_scenarios_random_walk(name):
+    rep = explore(CLEAN[name], name=name, schedules=5, seed=7, bound=None,
+                  switch_p=0.4)
+    assert rep.kinds() == set(), rep.findings
+
+
+# ------------------------------------------------------------ trace replay
+def test_replay_divergence_detected():
+    spec, rep = _find("abba")
+    trace = dict(rep.first_failing["trace"])
+    # corrupt the trace: force a switch to a thread that cannot be offered
+    decisions = [list(d) for d in trace["decisions"]]
+    assert decisions, "ABBA trace recorded no decisions?"
+    decisions[0][2] = "no-such-thread"
+    trace["decisions"] = decisions
+    with pytest.raises(ReplayDivergence):
+        replay(spec["scenario"], trace)
+
+
+def test_replay_policy_answers_recorded_decisions_only():
+    pol = ReplayPolicy({"decisions": [[3, "yield", "w1"]]})
+    # unrecorded yield steps: stay on the current thread
+    assert pol.decide("yield", 1, ["main", "w1"], "main") == "main"
+    # the recorded step fires exactly once
+    assert pol.decide("yield", 3, ["main", "w1"], "main") == "w1"
+    # an unrecorded forced decision is a divergence, never a guess
+    with pytest.raises(ReplayDivergence):
+        pol.decide("blocked", 9, ["w0"], None)
+
+
+def test_preemption_bound_is_respected():
+    pol = PreemptionBoundedPolicy(seed=3, bound=2, switch_p=1.0)
+    switches = sum(
+        pol.decide("yield", i, ["a", "b"], "a") != "a" for i in range(50))
+    assert switches == 2
+    pol.reset(1)  # per-schedule budget, not a lifetime budget
+    assert pol.decide("yield", 0, ["a", "b"], "a") == "b"
+
+
+def test_random_walk_is_seed_deterministic():
+    a = RandomWalkPolicy(seed=11, switch_p=0.5).reset(4)
+    b = RandomWalkPolicy(seed=11, switch_p=0.5).reset(4)
+    seq_a = [a.decide("yield", i, ["x", "y", "z"], "x") for i in range(40)]
+    seq_b = [b.decide("yield", i, ["x", "y", "z"], "x") for i in range(40)]
+    assert seq_a == seq_b
+
+
+# ---------------------------------------------------- detector unit layer
+def test_lock_order_graph_reports_cycle_once():
+    g = LockOrderGraph()
+    a, b = object(), object()
+    g.name_lock(a, "A")
+    g.name_lock(b, "B")
+    assert g.add_edge(a, b) is None
+    assert g.add_edge(b, a) == ("B", "A")
+    assert g.add_edge(b, a) is None  # dedup: one report per lock pair
+
+
+def test_detector_follows_provider_chains():
+    det = DeadlockDetector(name_fn=lambda: "t?")
+    assert det.on_block("t1", WaitEdge("spsc-full", provider="t2")) is None
+    verdict = det.on_block("t2", WaitEdge("spsc-full", provider="t1"))
+    assert verdict is not None and verdict["kind"] == DEADLOCK_CYCLE
+    assert set(verdict["threads"]) == {"t1", "t2"}
+
+
+def test_detector_lock_ownership_edges():
+    det = DeadlockDetector(name_fn=lambda: "holder")
+    lk = object.__new__(LockOrderGraph)  # any identity works as a lock key
+    det.order.name_lock(lk, "L")
+    assert det.on_acquire(lk) is None
+    assert det.owner(lk) == "holder"
+    assert det.held_stack("holder") == ["L"]
+    verdict = det.on_block("waiter", WaitEdge("lock", resource=lk,
+                                              label="L"))
+    assert verdict is None  # holder is runnable: a chain, not a cycle
+    det.on_release(lk)
+    assert det.owner(lk) is None
+
+
+def test_stall_report_lists_every_blocked_thread():
+    det = DeadlockDetector(name_fn=lambda: "t?")
+    waits = {"a": WaitEdge("barrier", label="barrier"),
+             "b": WaitEdge("taskwait", label="taskwait(x)")}
+    v = det.stall_report(waits)
+    assert v["kind"] == DEADLOCK_CYCLE
+    assert "global stall" in v["message"]
+    assert v["threads"] == ["a", "b"]

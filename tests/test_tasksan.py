@@ -20,7 +20,7 @@ from repro.core.asm import READ_SAT, WRITE_SAT, WaitFreeDependencySystem
 from repro.core.instrument import EVENTS, Tracer, register_event
 from repro.core.locks import MutexLock
 from repro.core.parking import ParkingLot
-from repro.core.runtime import TaskRuntime
+from repro.core.runtime import TaskRuntime, current_task
 
 
 # --------------------------------------------------------------- bug seeds
@@ -280,6 +280,41 @@ def test_clean_taskwait_and_groups():
     _assert_clean(rt)
 
 
+def _collect_barrier_workload(rt):
+    """Nested-orphan lineage reuse across a collect(): a parent with no
+    declared accesses spawns a child writing 'x'; after quiescence +
+    collect() a fresh ROOT task writes 'x' again. The child's release
+    clock lives under the parent's domain key, so pre-fix the fresh
+    root task was checked against stale shadow state and reported a
+    spurious write-write race — collect() at quiescence is a full
+    happens-before barrier and must retire that state."""
+    def parent():
+        rt.spawn(lambda: None, writes=["x"], parent=current_task(),
+                 name="child")
+    rt.spawn(parent, name="parent")
+    assert rt.barrier(timeout=30)
+    rt.collect()
+    rt.spawn(lambda: None, writes=["x"], name="fresh-root")
+    assert rt.barrier(timeout=30)
+
+
+def test_collect_quiescence_is_hb_barrier():
+    rt = TaskRuntime(n_workers=2, sanitize=True)
+    with rt:
+        _collect_barrier_workload(rt)
+    _assert_clean(rt)
+
+
+def test_collect_barrier_scenario_reproduces_without_fix():
+    # the same workload WITH on_collect disabled must re-report the
+    # historical spurious race — proof the regression test has teeth
+    rt = TaskRuntime(n_workers=2, sanitize="report")
+    rt.san.on_collect = lambda: None  # simulate the pre-fix sanitizer
+    with rt:
+        _collect_barrier_workload(rt)
+    assert tsan_mod.RACE_WW in {f.kind for f in rt.san.findings}
+
+
 def test_env_opt_in(monkeypatch):
     monkeypatch.setenv("REPRO_SANITIZE", "report")
     rt = TaskRuntime(n_workers=1)
@@ -391,6 +426,61 @@ def test_lint_task_retention(tmp_path):
             return local_only is None
     """)
     assert [f.rule for f in findings] == ["task-retention"] * 3
+
+
+def test_lint_task_retention_dataclass_fields(tmp_path):
+    findings = _lint_snippet(tmp_path, "engine.py", """
+        from dataclasses import dataclass, field
+
+        @dataclass
+        class Pending:
+            task: object
+            tag: str = ""
+
+        @dataclass(frozen=True)
+        class Frozen:
+            task: object
+
+        class NotADataclass:
+            def __init__(self, task):
+                pass
+
+        def bad_positional(self, rt):
+            t = rt.spawn(fn)
+            self.pending = Pending(t)
+
+        def bad_keyword(self, rt):
+            t = rt.spawn(fn)
+            self.pending = Pending(task=t, tag="x")
+
+        def bad_inline(self, rt):
+            self.pending = Frozen(rt.spawn(fn))
+
+        def good(self, rt):
+            t = rt.spawn(fn, retain=True)
+            self.pending = Pending(t)
+            u = rt.spawn(fn)
+            plain = NotADataclass(u)  # plain class: out of rule scope
+            return plain
+    """)
+    assert [f.rule for f in findings] == ["task-retention"] * 3
+    assert all("dataclass" in f.message for f in findings)
+
+
+def test_lint_task_retention_dataclass_suppression(tmp_path):
+    findings = _lint_snippet(tmp_path, "engine.py", """
+        from dataclasses import dataclass
+
+        @dataclass
+        class Pending:
+            task: object
+
+        def justified(self, rt):
+            t = rt.spawn(fn)
+            # consumed before the task can finish:  lint: ok(task-retention)
+            return Pending(t)
+    """)
+    assert findings == []
 
 
 def test_lint_event_catalog(tmp_path):

@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""taskcheck CLI — deterministic schedule exploration for the task runtime.
+
+Modes:
+
+* ``--smoke``: the CI gate. Explores every CLEAN scenario (any finding is
+  a failure — false-positive guard) and every SEEDED bug scenario (the
+  expected finding kind must surface within the registered budget, and its
+  recorded trace must replay to the same kinds). Failing traces are dumped
+  to ``--out`` for the artifact upload. Exit 1 on any miss.
+* ``--scenario NAME``: explore one scenario from the registry (clean or
+  seeded) with overridable budget knobs; dumps the first failing trace.
+* ``--replay TRACE.json``: re-run a scenario under a recorded decision
+  trace — deterministic reproduction of a previously-found schedule. The
+  scenario name comes from ``--scenario`` or the trace file itself.
+
+Usage:
+    python tools/taskcheck.py --smoke [--out DIR]
+    python tools/taskcheck.py --scenario abba [--schedules N] [--seed S]
+        [--bound B | --random-walk] [--out DIR]
+    python tools/taskcheck.py --replay trace.json [--scenario NAME]
+    python tools/taskcheck.py --list
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analyze.explore import explore, replay  # noqa: E402
+from repro.analyze.scenarios import CLEAN, SEEDED  # noqa: E402
+
+
+def _scenario(name: str):
+    if name in SEEDED:
+        return SEEDED[name]["scenario"]
+    if name in CLEAN:
+        return CLEAN[name]
+    sys.exit(f"taskcheck: unknown scenario {name!r} "
+             f"(--list shows {sorted(CLEAN) + sorted(SEEDED)})")
+
+
+def _dump_trace(out_dir: str, name: str, trace: dict) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"taskcheck-{name}.trace.json")
+    with open(path, "w") as f:
+        json.dump({"scenario": name, **trace}, f, indent=1)
+    return path
+
+
+def cmd_list() -> int:
+    print("clean scenarios (exploring them must find nothing):")
+    for n in sorted(CLEAN):
+        print(f"  {n}")
+    print("seeded bug scenarios (expected finding in parentheses):")
+    for n, spec in sorted(SEEDED.items()):
+        print(f"  {n}  ({', '.join(sorted(spec['expect']))})")
+    return 0
+
+
+def cmd_smoke(out_dir: str, budget_scale: float) -> int:
+    failures = []
+    t0 = time.time()
+    for name, fn in sorted(CLEAN.items()):
+        rep = explore(fn, name=name, schedules=max(1, int(10 * budget_scale)),
+                      seed=0, bound=2)
+        kinds = sorted(rep.kinds())
+        status = "ok" if not kinds else f"FALSE POSITIVE {kinds}"
+        print(f"clean/{name:16s} {rep.n_schedules:3d} schedules  {status}")
+        if kinds:
+            failures.append(f"clean/{name}: unexpected findings {kinds}")
+            if rep.first_failing is not None:
+                _dump_trace(out_dir, f"clean-{name}",
+                            rep.first_failing["trace"])
+    for name, spec in sorted(SEEDED.items()):
+        kw = dict(spec["explore"])
+        kw["schedules"] = max(1, int(kw["schedules"] * budget_scale))
+        rep = explore(spec["scenario"], name=name, **kw)
+        found = spec["expect"] <= rep.kinds()
+        line = (f"seeded/{name:15s} {rep.n_schedules:3d} schedules  "
+                f"found={sorted(rep.kinds()) or '[]'}")
+        if not found:
+            print(line + f"  MISSED {sorted(spec['expect'])}")
+            failures.append(
+                f"seeded/{name}: expected {sorted(spec['expect'])}, "
+                f"got {sorted(rep.kinds())}")
+            continue
+        # determinism gate: the recorded trace must replay to the same kinds
+        trace = rep.first_failing["trace"]
+        exp2 = replay(spec["scenario"], trace)
+        if not (spec["expect"] <= exp2.kinds()):
+            print(line + "  REPLAY DIVERGED")
+            failures.append(
+                f"seeded/{name}: replay produced {sorted(exp2.kinds())}")
+            _dump_trace(out_dir, name, trace)
+            continue
+        path = _dump_trace(out_dir, name, trace)
+        print(line + f"  replayed ok -> {os.path.relpath(path, _ROOT)}")
+    dt = time.time() - t0
+    if failures:
+        print(f"\ntaskcheck: {len(failures)} failure(s) in {dt:.1f}s")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\ntaskcheck: smoke clean ({len(CLEAN)} clean + {len(SEEDED)} "
+          f"seeded scenarios, {dt:.1f}s)")
+    return 0
+
+
+def cmd_explore(args) -> int:
+    fn = _scenario(args.scenario)
+    kw = dict(SEEDED[args.scenario]["explore"]) if args.scenario in SEEDED \
+        else {"schedules": 25, "seed": 0, "bound": 2}
+    if args.schedules is not None:
+        kw["schedules"] = args.schedules
+    if args.seed is not None:
+        kw["seed"] = args.seed
+    if args.random_walk:
+        kw["bound"] = None
+    elif args.bound is not None:
+        kw["bound"] = args.bound
+    rep = explore(fn, name=args.scenario, **kw)
+    print(f"{args.scenario}: {rep.n_schedules} schedule(s), findings: "
+          f"{sorted(rep.kinds()) or 'none'}")
+    for f in rep.findings:
+        print(f"  [{f.kind}] {f.message}")
+    if rep.first_failing is not None:
+        path = _dump_trace(args.out, args.scenario,
+                           rep.first_failing["trace"])
+        print(f"first failing trace -> {os.path.relpath(path, _ROOT)}")
+        print(f"replay with: python tools/taskcheck.py --replay {path}")
+    return 1 if rep.findings else 0
+
+
+def cmd_replay(args) -> int:
+    with open(args.replay) as f:
+        trace = json.load(f)
+    name = args.scenario or trace.get("scenario")
+    if not name:
+        sys.exit("taskcheck: trace has no scenario name; pass --scenario")
+    exp = replay(_scenario(name), trace)
+    print(f"replayed {name}: findings: {sorted(exp.kinds()) or 'none'}")
+    for f in exp.findings:
+        print(f"  [{f.kind}] {f.message}")
+    return 1 if exp.findings else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="taskcheck", description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate over the whole scenario registry")
+    ap.add_argument("--scenario", help="registry scenario to explore")
+    ap.add_argument("--replay", metavar="TRACE.json",
+                    help="replay a recorded decision trace")
+    ap.add_argument("--list", action="store_true", dest="list_",
+                    help="list registry scenarios")
+    ap.add_argument("--schedules", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--bound", type=int, default=None,
+                    help="preemption bound (CHESS-style)")
+    ap.add_argument("--random-walk", action="store_true",
+                    help="use the unbounded random-walk policy")
+    ap.add_argument("--budget-scale", type=float, default=1.0,
+                    help="scale every smoke schedule budget (CI knob)")
+    ap.add_argument("--out", default=os.path.join(_ROOT, "taskcheck-out"),
+                    help="directory for failing-trace artifacts")
+    args = ap.parse_args(argv)
+    if args.list_:
+        return cmd_list()
+    if args.smoke:
+        return cmd_smoke(args.out, args.budget_scale)
+    if args.replay:
+        return cmd_replay(args)
+    if args.scenario:
+        return cmd_explore(args)
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())
