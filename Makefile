@@ -13,7 +13,7 @@ lint:
 sanitize-smoke:
 	REPRO_SANITIZE=1 REPRO_SANITIZE_REPORT=san-report.jsonl PYTHONPATH=src \
 	  $(PY) -m pytest -q tests/test_lifecycle.py tests/test_parking.py \
-	  tests/test_scheduler.py tests/test_tasksan.py
+	  tests/test_scheduler.py tests/test_tasksan.py tests/test_worksharing.py
 
 explore-smoke:
 	PYTHONPATH=src $(PY) tools/taskcheck.py --smoke --out taskcheck-out
@@ -21,6 +21,7 @@ explore-smoke:
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --smoke --json taskbench-smoke.json
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --repeats 3 --json taskbench-wake.json
+	PYTHONPATH=src $(PY) benchmarks/taskbench.py --worksharing --smoke --json taskbench-worksharing.json
 
 bench-wake:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --json taskbench-wake.json

@@ -287,6 +287,166 @@ def sanitize_overhead(tasks_per_s: float, budget: float = 0.02) -> dict:
     return row
 
 
+# ------------------------------------------------------ worksharing sweep
+WS_GRANS_US = (1, 10, 100, 1000)
+WS_CHUNKS = (1, 8, 64, "auto")
+WS_BENCHES = ("dotprod", "heat", "spmv")
+
+
+def _ws_kernel(target_us: float):
+    """Calibrate a numpy-dot unit of work to ~``target_us`` per call.
+    Returns (x, y, measured_us); every sweep variant shares the kernel so
+    the only difference between arms is HOW iterations become tasks."""
+    import time as _t
+
+    rng = np.random.default_rng(7)
+    L = 64
+    while True:
+        x = rng.standard_normal(L)
+        y = rng.standard_normal(L)
+        reps = max(8, min(4096, int(4000 / max(target_us, 1))))
+        t0 = _t.perf_counter_ns()
+        for _ in range(reps):
+            x @ y  # noqa: B018 — the calibrated work itself
+        per_us = (_t.perf_counter_ns() - t0) / reps / 1e3
+        if per_us >= target_us or L >= 1 << 23:
+            return x, y, per_us
+        L = int(L * min(4.0, max(1.4, target_us / max(per_us, 0.05))))
+
+
+def _ws_variants(bench: str, x, y, iters: int):
+    """Two arms with the SAME kernel and dependency intent:
+
+    * per-iteration — one spawned task per iteration, addresses windowed
+      (mod W) so repeat-to-repeat lineage stays bounded;
+    * taskloop — ONE worksharing descriptor for the whole range with the
+      accesses registered once at loop level.
+    """
+    W = 16
+    if bench == "dotprod":
+        acc = [0.0]
+
+        def periter(rt):
+            def part(i):
+                acc[0] += float(x @ y)
+            for i in range(iters):
+                rt.spawn(part, (i,), reads=[("x", i % W), ("y", i % W)],
+                         reductions=[("acc", "+")])
+            return iters
+
+        def taskloop(rt, chunk):
+            def body(lo, hi, a):
+                for _ in range(lo, hi):
+                    a += float(x @ y)
+                return a
+            rt.taskloop(iters, body, chunk=chunk, reduce="+",
+                        reads=[("x",), ("y",)], reductions=[("acc", "+")])
+            return iters
+    elif bench == "heat":
+        def periter(rt):
+            def relax(i):
+                x @ y  # noqa: B018
+            for i in range(iters):
+                rt.spawn(relax, (i,), reads=[("g", (i + 1) % 8)],
+                         rw=[("g", i % 8)])
+            return iters
+
+        def taskloop(rt, chunk):
+            def body(lo, hi):
+                for _ in range(lo, hi):
+                    x @ y  # noqa: B018
+            rt.taskloop(iters, body, chunk=chunk, rw=[("g",)])
+            return iters
+    elif bench == "spmv":
+        ys = [0.0] * W
+
+        def periter(rt):
+            def mv(i):
+                ys[i % W] += float(x @ y)
+            for i in range(iters):
+                rt.spawn(mv, (i,), reads=[("x", i % W)],
+                         reductions=[(("y", i % W), "+")])
+            return iters
+
+        def taskloop(rt, chunk):
+            def body(lo, hi):
+                for i in range(lo, hi):
+                    ys[i % W] += float(x @ y)  # GIL-serialized, same as arm 1
+            rt.taskloop(iters, body, chunk=chunk, reads=[("x",)],
+                        reductions=[(("y",), "+")])
+            return iters
+    else:
+        raise ValueError(f"no worksharing variant for {bench!r}")
+    return periter, taskloop
+
+
+def _ws_cell(make, n_workers: int, repeats: int) -> float:
+    """Median iterations/s for one (bench, gran, variant) cell: one runtime,
+    one untimed warmup, lineage collected between repeats."""
+    import time as _t
+
+    from repro.core import TaskRuntime
+
+    rt = TaskRuntime(n_workers=n_workers).start()
+    try:
+        n = make(rt)
+        ok = rt.barrier(timeout=300)
+        assert ok, "worksharing warmup did not quiesce"
+        rt.collect()
+        times = []
+        for _ in range(repeats):
+            t0 = _t.perf_counter()
+            n = make(rt)
+            ok = rt.barrier(timeout=300)
+            dt = _t.perf_counter() - t0
+            assert ok, "worksharing cell did not quiesce"
+            times.append(dt)
+            rt.collect()
+    finally:
+        rt.shutdown()
+    times.sort()
+    return n / times[len(times) // 2]
+
+
+def worksharing_sweep(n_workers: int = 3, repeats: int = 7,
+                      grans_us=WS_GRANS_US, chunks=WS_CHUNKS,
+                      benches=WS_BENCHES, guard: bool = True) -> list:
+    """Granularity sweep: per-iteration spawning vs ``taskloop`` at several
+    chunk grains, same calibrated kernel. ``guard`` asserts the worksharing
+    contract — the best taskloop grain is never slower than per-iteration
+    tasks at ANY granularity (at fine grain it should be several times
+    faster: one descriptor amortizes spawn/dep/finalize over the range)."""
+    rows = []
+    print("bench,gran_us,variant,chunk,iters,iters_per_s,speedup")
+    for gran in grans_us:
+        x, y, kernel_us = _ws_kernel(gran)
+        iters = max(100, min(2000, int(200_000 // gran)))
+        for bench in benches:
+            periter, taskloop = _ws_variants(bench, x, y, iters)
+            pi = _ws_cell(periter, n_workers, repeats)
+            rows.append({"bench": bench, "gran_us": gran,
+                         "kernel_us": kernel_us, "variant": "per-iter",
+                         "chunk": None, "iters": iters, "iters_per_s": pi})
+            print(f"{bench},{gran},per-iter,-,{iters},{pi:.0f},1.00",
+                  flush=True)
+            best = 0.0
+            for chunk in chunks:
+                tl = _ws_cell(lambda rt, c=chunk: taskloop(rt, c),
+                              n_workers, repeats)
+                best = max(best, tl)
+                rows.append({"bench": bench, "gran_us": gran,
+                             "kernel_us": kernel_us, "variant": "taskloop",
+                             "chunk": chunk, "iters": iters,
+                             "iters_per_s": tl, "speedup": tl / pi})
+                print(f"{bench},{gran},taskloop,{chunk},{iters},{tl:.0f},"
+                      f"{tl / pi:.2f}", flush=True)
+            if guard:
+                assert best >= pi, (
+                    f"{bench}@{gran}us: best taskloop {best:.0f} it/s "
+                    f"slower than per-iteration {pi:.0f} it/s")
+    return rows
+
+
 # ---------------------------------------------------------- wake latency
 def wake_latency_once(parking: str, n_workers: int = 8, n_tasks: int = 150,
                       gap_s: float = 0.002, idle_s: float = 1.0) -> dict:
@@ -401,6 +561,8 @@ def main():
                     help="quick CI run (3 benchmarks, fine granularity)")
     ap.add_argument("--wake-latency", action="store_true",
                     help="compare parking-slot vs eventcount wake paths")
+    ap.add_argument("--worksharing", action="store_true",
+                    help="per-iteration tasks vs taskloop granularity sweep")
     ap.add_argument("--bench", default=None,
                     help="run a single named benchmark instead")
     ap.add_argument("--gran", default="fine",
@@ -412,7 +574,15 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows to a JSON file")
     args = ap.parse_args()
-    if args.wake_latency:
+    if args.worksharing:
+        import os
+        full = os.environ.get("FAST", "1") != "1" and not args.smoke
+        rows = worksharing_sweep(
+            n_workers=args.workers or 3,
+            repeats=7 if full else 3,
+            grans_us=WS_GRANS_US if full else (1, 100),
+            benches=WS_BENCHES if full else ("dotprod",))
+    elif args.wake_latency:
         rows = wake_latency(n_workers=args.workers or 8,
                             repeats=args.repeats)
     elif args.bench:

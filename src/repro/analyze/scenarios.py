@@ -20,10 +20,11 @@ from __future__ import annotations
 
 from repro.analyze.deadlock import DEADLOCK_CYCLE, LIVELOCK, WAIT_SPSC
 from repro.analyze.explore import checkpoint, current_name
-from repro.analyze.tsan import LOST_WAKE
+from repro.analyze.tsan import LOST_WAKE, WS_LOST_CHUNK
 from repro.core.locks import TicketLock
 from repro.core.parking import ParkingLot
 from repro.core.runtime import TaskRuntime, current_task
+from repro.core.task import WorksharingTask
 
 
 # ------------------------------------------------------------------ clean
@@ -184,6 +185,32 @@ def clean_group_cancel(exp):
         rt.shutdown()
 
 
+def _clean_ws(scheduler, deps):
+    """Worksharing taskloops (dependent pair + reduction) under every
+    scheduler policy and both dependency systems: claim/execute/finalize
+    must be finding-free on every explored interleaving."""
+    def scenario(exp):
+        rt = TaskRuntime(n_workers=2, explore=exp, scheduler=scheduler,
+                         deps=deps)
+        rt.start()
+        try:
+            out = [0] * 6
+            def fill(lo, hi):
+                for i in range(lo, hi):
+                    out[i] = i + 1
+            rt.taskloop(6, fill, chunk=2, name="fill", writes=[("ws",)])
+            got = rt.taskloop(
+                6, lambda lo, hi, acc: acc + sum(out[lo:hi]), chunk=2,
+                name="total", reduce="+", reads=[("ws",)], wait=True)
+            rt.barrier()
+            assert out == [i + 1 for i in range(6)], out
+            assert got == sum(out), got
+        finally:
+            rt.shutdown()
+    scenario.__name__ = f"clean_ws_{scheduler}_{deps}"
+    return scenario
+
+
 # ----------------------------------------------------------- seeded bugs
 def bug_abba(exp):
     """ABBA lock inversion: t1 takes A then B, t2 takes B then A. A
@@ -253,6 +280,47 @@ bug_lost_wake = _lost_wake_scenario(ParkAfterWake)
 bug_lost_wake.__name__ = "bug_lost_wake"
 control_lost_wake = _lost_wake_scenario(ParkingLot)
 control_lost_wake.__name__ = "control_lost_wake"
+
+
+class RacyCursorWS(WorksharingTask):
+    """DELIBERATE BUG: the chunk-claim cursor uses a load / checkpoint /
+    store sequence instead of an atomic fetch_add. Two participants that
+    interleave in the window both claim the SAME chunk index (one
+    increment is lost), so one worker's chunk work is doubled and the
+    exactly-once dispatch contract breaks — tasksan's claim journal
+    reports it as ``ws.lost-chunk`` when the descriptor finalizes."""
+
+    def ws_claim(self):
+        if self._ws_cancelled:
+            return None
+        idx = self._ws_cursor.load()
+        if idx >= self.ws_nchunks:
+            return None
+        checkpoint()  # the racy read-modify-write window
+        self._ws_cursor.store(idx + 1)
+        return idx
+
+
+def bug_ws_lost_chunk(exp):
+    """Racing claim cursor (see :class:`RacyCursorWS`): the explorer
+    preempts one participant between its cursor load and store while the
+    peer claims the same index. tasksan runs in report mode alongside the
+    explorer; its coverage finding is bridged into the schedule report."""
+    rt = TaskRuntime(n_workers=2, explore=exp, sanitize="report")
+    rt.pool._ws_pool._factory = RacyCursorWS  # swap the buggy descriptor in
+    rt.start()
+    try:
+        out = []
+        rt.taskloop(8, lambda lo, hi: out.append(lo), chunk=1, name="racy")
+        rt.barrier(timeout=10)
+    finally:
+        try:
+            rt.shutdown(wait=False)
+        finally:
+            for f in rt.san.findings:
+                if f.kind == WS_LOST_CHUNK:
+                    exp._add_finding(f.to_dict())
+                    break
 
 
 def bug_group_self_wait(exp):
@@ -330,6 +398,9 @@ CLEAN = {
     "work-stealing": clean_work_stealing,
     "group-cancel": clean_group_cancel,
 }
+for _sched in ("delegation", "global-lock", "work-stealing"):
+    for _deps in ("waitfree", "locked"):
+        CLEAN[f"ws-{_sched}-{_deps}"] = _clean_ws(_sched, _deps)
 
 # name -> {scenario, expect (kinds that must appear), explore kwargs}
 SEEDED = {
@@ -359,5 +430,10 @@ SEEDED = {
         "expect": {LIVELOCK},
         "explore": {"schedules": 5, "seed": 0, "bound": 2,
                     "watchdog": 400},
+    },
+    "ws-lost-chunk": {
+        "scenario": bug_ws_lost_chunk,
+        "expect": {WS_LOST_CHUNK},
+        "explore": {"schedules": 40, "seed": 0, "bound": 2},
     },
 }

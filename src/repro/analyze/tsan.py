@@ -46,7 +46,10 @@ Checks
   the signature of a dropped wake (the futex protocol makes this
   impossible in the correct runtime);
 * lock-order inversion: a cycle in the acquisition-order graph fed by the
-  acquire/release hooks in :mod:`repro.core.locks`.
+  acquire/release hooks in :mod:`repro.core.locks`;
+* worksharing chunk coverage: every chunk of a ``taskloop`` descriptor must
+  be claimed exactly once before the last participant finalizes it — a
+  duplicated or missing chunk index means the claim cursor raced.
 
 Ancestor/descendant accesses to the same address are never reported: a
 child domain holds (a subset of) its parent's access rights by
@@ -86,10 +89,11 @@ CANCEL_BODY_RAN = "cancel.body-ran"
 LOST_WAKE = "parking.lost-wake"
 LOCK_ORDER = "lock.order-inversion"
 LOCK_UNHELD = "lock.unheld-release"
+WS_LOST_CHUNK = "ws.lost-chunk"
 
 KINDS = (RACE_WW, RACE_RW, RACE_RED, COMMUTATIVE_OVERLAP, STALE_GENERATION,
          RECYCLED_LIVE, DOUBLE_FINALIZE, CANCEL_BODY_RAN, LOST_WAKE,
-         LOCK_ORDER, LOCK_UNHELD)
+         LOCK_ORDER, LOCK_UNHELD, WS_LOST_CHUNK)
 
 
 class TaskSanError(RuntimeError):
@@ -210,6 +214,9 @@ class TaskSanitizer:
         # acquisition-order graph over watched lock instances (shared
         # implementation with the deadlock detector, see analyze/deadlock)
         self.lock_graph = LockOrderGraph()
+        # worksharing chunk-claim journal: node -> list of claimed indices
+        # (checked for exactly-once coverage when the descriptor finalizes)
+        self._ws_claims: dict = {}
         # lost-wake detector state
         self._armed_lost_wake = False
         self._lost_wake_reported = False
@@ -486,6 +493,100 @@ class TaskSanitizer:
             self._shadow.clear()
             self._active.clear()
             self._release_clocks.clear()
+
+    # ------------------------------------------------------------ worksharing
+    # A worksharing descriptor is ONE logical task executed by several
+    # participants. Happens-before: publish/spawn -> every join (the
+    # participant joins the descriptor's clock); every leave -> finalize
+    # (the leaver's clock joins the descriptor's, so successors released by
+    # the last-chunk finalize are ordered after ALL chunk bodies). Claims
+    # are journaled and checked for exactly-once coverage at finalize — a
+    # racy cursor shows up as a duplicated or missing chunk index.
+    def on_ws_join(self, task, wid) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        ctx = self._ctx()
+        with self._lock:
+            self._armed_lost_wake = False  # progress: chunks are flowing
+            dst = ctx.current.clock if ctx.current is not None else ctx.clock
+            _join(dst, node.clock)
+            if not node.started:
+                # first participant in: open the descriptor's access epoch
+                # exactly once (peers joining later see started already set)
+                node.started = True
+                for acc in task.accesses:
+                    self._check_access_start(node, acc)
+                    self._active.setdefault(acc.address, {})[node] = (
+                        acc.atype, acc.red_op)
+
+    def on_ws_claim(self, task, idx: int) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        with self._lock:
+            self._ws_claims.setdefault(node, []).append(idx)
+
+    def on_ws_leave(self, task) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        ctx = self._ctx()
+        with self._lock:
+            src = ctx.current.clock if ctx.current is not None else ctx.clock
+            src[ctx.id] = src.get(ctx.id, 0) + 1
+            _join(node.clock, src)
+
+    def on_ws_done(self, task, cancelled: bool = False) -> None:
+        node = getattr(task, "_san_node", None)
+        if node is None:
+            return
+        with self._lock:
+            claims = self._ws_claims.pop(node, [])
+            seen: set = set()
+            dups = sorted({i for i in claims if i in seen or seen.add(i)})
+            if dups:
+                self._finding(
+                    WS_LOST_CHUNK,
+                    f"{node.label} chunk(s) {dups} claimed more than once "
+                    "— the claim cursor lost an increment, so one "
+                    "participant's work overwrites another's (exactly-once "
+                    "chunk dispatch is the worksharing contract)",
+                    task=node.label, duplicated=dups,
+                    claims=len(claims), nchunks=task.ws_nchunks)
+            elif not cancelled and task.exception is None:
+                missing = sorted(set(range(task.ws_nchunks)) - seen)
+                if missing:
+                    self._finding(
+                        WS_LOST_CHUNK,
+                        f"{node.label} finalized with chunk(s) {missing} "
+                        "never claimed — iterations were silently dropped",
+                        task=node.label, missing=missing,
+                        claims=len(claims), nchunks=task.ws_nchunks)
+            if cancelled:
+                cc = getattr(task.group, "_san_cancel_clock", None)
+                if cc:
+                    _join(node.clock, cc)
+            # close the access epoch (the on_end analogue for descriptors)
+            node.clock[node.id] = node.clock.get(node.id, 0) + 1
+            tick = node.clock[node.id]
+            for acc in task.accesses:
+                act = self._active.get(acc.address)
+                if act is not None:
+                    act.pop(node, None)
+                    if not act:
+                        del self._active[acc.address]
+                sh = self._shadow.get(acc.address)
+                if sh is None:
+                    sh = self._shadow[acc.address] = _Shadow()
+                if acc.atype == READ:
+                    sh.readers[node] = tick
+                elif acc.atype == REDUCTION:
+                    sh.reds[node] = (tick, acc.red_op)
+                else:
+                    sh.write = (node, tick)
+                    sh.readers.clear()
+                    sh.reds.clear()
 
     # ------------------------------------------------------------ parking
     def on_enqueue_outcome(self, woken: bool, n_idle: int,

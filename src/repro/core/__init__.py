@@ -13,7 +13,7 @@ from repro.core.runtime import TaskGroup, TaskRuntime, current_task
 from repro.core.scheduler import (GlobalLockScheduler, SyncScheduler,
                                   UnsyncScheduler, WorkStealingScheduler)
 from repro.core.spsc import SPSCQueue
-from repro.core.task import StaleTaskError, Task, TaskRef
+from repro.core.task import StaleTaskError, Task, TaskRef, WorksharingTask
 
 __all__ = [
     "COMMUTATIVE", "READ", "READWRITE", "REDUCTION", "WRITE",
@@ -23,5 +23,5 @@ __all__ = [
     "TaskPool", "TaskGroup", "TaskRuntime", "current_task",
     "GlobalLockScheduler", "SyncScheduler", "UnsyncScheduler",
     "WorkStealingScheduler", "SPSCQueue", "StaleTaskError", "Task",
-    "TaskRef", "max_deliveries",
+    "TaskRef", "WorksharingTask", "max_deliveries",
 ]

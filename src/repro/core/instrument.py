@@ -52,6 +52,9 @@ EVENTS = {
     "explore.replay": 27,   # taskcheck: a recorded trace was replayed
     "deadlock.cycle": 28,   # taskcheck: wait-for / lock-order cycle found
     "deadlock.livelock": 29,  # taskcheck: no-progress watchdog fired
+    "ws.claim": 30,         # worksharing chunk claimed (arg: chunk index)
+    "ws.finalize": 31,      # worksharing descriptor finalized by the last
+                            # participant out (arg: task id)
 }
 
 

@@ -183,10 +183,24 @@ class PTLock(_Monitored):
     def _advance(self):
         """Publish the next ticket (the bare tail bump, unmonitored): used
         both by ``unlock`` and by DTLock's owner serving a waiter — the
-        latter wakes the waiter *without* the owner giving up ownership."""
-        idx = self._tail % self.size
-        self._waitq[idx].store(self._tail)
-        self._tail += 1
+        latter wakes the waiter *without* the owner giving up ownership.
+
+        Order is load-bearing: ``_tail`` must be bumped BEFORE the waitq
+        store. The store is the ownership-transfer point — the granted
+        waiter may resume and run owner-side operations (``empty``/
+        ``front``/``set_item``/``pop_front``, each reading or advancing the
+        plain ``_tail`` field) the moment it lands. Publishing first left
+        the old owner's ``_tail += 1`` racing the new owner's: the
+        interleaved read-modify-writes could double-grant a ticket, let a
+        delegating waiter wake *before* its item was set (so it saw a stale
+        ready-slot ticket and wrongly took ownership), and permanently
+        strand the task that had been delegated to it — an intermittent
+        lost-task hang at fine granularity. With the bump first, the old
+        owner performs no ``_tail`` access after the transfer store, so the
+        field is only ever touched by one owner at a time."""
+        t = self._tail
+        self._tail = t + 1
+        self._waitq[t % self.size].store(t)
 
     def unlock(self):
         m = self._monitor

@@ -69,6 +69,7 @@ class ParkingLot:
         self._n_idle = AtomicU64(0)  # POLLING + PARKED (producer fast path)
         self.parks = AtomicU64(0)    # total park() calls (idle-churn stat)
         self.wakes = AtomicU64(0)    # total wakes posted
+        self.spurious = AtomicU64(0)  # woken workers that found no work
 
     # -- worker side ---------------------------------------------------
     def begin_poll(self, wid: int) -> int:
@@ -124,14 +125,20 @@ class ParkingLot:
 
     # -- producer side -------------------------------------------------
     def wake_one(self, prefer_numa: Optional[int] = None,
-                 prefer_wid: Optional[int] = None) -> bool:
+                 prefer_wid: Optional[int] = None,
+                 fresh_only: bool = False) -> bool:
         """Wake exactly one idle worker. Candidate order: the explicitly
         preferred worker, PARKED slots with no pending wake on the
         preferred NUMA node, any un-pending PARKED, POLLING (epoch bump
         only), then pending PARKED. The scan reads slot states racily, so a
         candidate that slipped back to RUNNING before its lock is skipped
         and the NEXT candidate is tried — a single posted wake must not be
-        silently dropped while other workers stay parked."""
+        silently dropped while other workers stay parked.
+
+        ``fresh_only`` drops the pending-PARKED last resort: ``wake_many``
+        uses it so a fan-out burst stops once every reachable worker
+        already carries an unconsumed wake, instead of re-bumping the same
+        slot once per remaining chunk."""
         if self._n_idle.load() == 0:
             return False
         slots = self.slots
@@ -164,10 +171,31 @@ class ParkingLot:
         for s in (parked, polling):
             if s is not None and self._post_wake(s):
                 return True
+        if fresh_only:
+            return False
         # last resort: a slot with an unconsumed wake — double-posting just
         # re-bumps its epoch, and its own wake-chaining covers the backlog
         return pending is not None and self._post_wake(pending,
                                                        allow_pending=True)
+
+    def wake_many(self, n: int, prefer_numa: Optional[int] = None) -> int:
+        """Wake up to ``n`` DISTINCT idle workers — fan-out for a burst of
+        claimable work (worksharing chunks, batch enqueues). The count is
+        the clamp to available work: waking more workers than there are
+        chunks only buys a park/unpark cycle per extra worker (idle churn).
+        Each wake goes to a fresh (no-pending-wake) slot; once every
+        reachable idle worker carries an unconsumed wake the burst stops —
+        except that a burst that reached NOBODY falls back to the
+        single-wake path (pending last resort included), so a posted batch
+        is never silently dropped while workers sleep."""
+        n = min(n, len(self.slots))
+        woken = 0
+        while woken < n and self.wake_one(prefer_numa=prefer_numa,
+                                          fresh_only=True):
+            woken += 1
+        if woken == 0 and n > 0:
+            woken = int(self.wake_one(prefer_numa=prefer_numa))
+        return woken
 
     def _post_wake(self, s: ParkingSlot, allow_pending: bool = False) -> bool:
         with s.cond:
@@ -202,6 +230,13 @@ class ParkingLot:
     def n_parked(self) -> int:
         return sum(1 for s in self.slots if s.state == PARKED)
 
+    @property
+    def n_pending_wakes(self) -> int:
+        """Posted-but-unconsumed wakes (wakes already 'in flight'). The
+        worker wake-chain clamps against this so a burst does not chain
+        more wakes than there is work left over the in-flight ones."""
+        return sum(1 for s in self.slots if s.pending_wake)
+
 
 class EventcountParking:
     """PR-1 behavior: one global (sequence, condition) pair for all workers.
@@ -221,6 +256,7 @@ class EventcountParking:
         self._n_idle = 0  # mutated only under _cond
         self.parks = AtomicU64(0)
         self.wakes = AtomicU64(0)
+        self.spurious = AtomicU64(0)
 
     def begin_poll(self, wid: int) -> int:
         with self._cond:
@@ -265,6 +301,20 @@ class EventcountParking:
             self._seq += 1
             self._cond.notify_all()
 
+    def wake_many(self, n: int, prefer_numa: Optional[int] = None) -> int:
+        """Burst wake: one epoch bump, up to ``n`` waiters notified. The
+        single condition cannot target distinct workers — that is exactly
+        the scalability gap the slot design closes."""
+        with self._cond:
+            k = min(n, self._n_idle)
+            if k <= 0:
+                return 0
+            self._seq += 1
+            for _ in range(k):
+                self._cond.notify()
+        self.wakes.fetch_add(k)
+        return k
+
     @property
     def n_idle(self) -> int:
         return self._n_idle
@@ -272,6 +322,10 @@ class EventcountParking:
     @property
     def n_parked(self) -> int:
         return self._n_idle
+
+    @property
+    def n_pending_wakes(self) -> int:
+        return 0  # the global eventcount cannot attribute wakes to workers
 
 
 PARKING_KINDS = {

@@ -12,7 +12,7 @@ from typing import Callable, Optional
 
 from repro.core.asm import DataAccess
 from repro.core.atomic import AtomicU64
-from repro.core.task import Task
+from repro.core.task import Task, WorksharingTask
 
 
 class ObjectPool:
@@ -78,6 +78,9 @@ class TaskPool:
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self._pool = ObjectPool(Task, reset=lambda t: t.reset())
+        # worksharing descriptors carry extra loop state (cursor, lock,
+        # partial slots) — separate freelist, shared outstanding count
+        self._ws_pool = ObjectPool(WorksharingTask, reset=lambda t: t.reset())
         self._outstanding = AtomicU64(0)
         self.san = None  # tasksan hook (install() sets it)
 
@@ -85,6 +88,14 @@ class TaskPool:
         if not self.enabled:
             return Task()
         t = self._pool.acquire()
+        t.pooled = True
+        self._outstanding.fetch_add(1)
+        return t
+
+    def acquire_ws(self) -> WorksharingTask:
+        if not self.enabled:
+            return WorksharingTask()
+        t = self._ws_pool.acquire()
         t.pooled = True
         self._outstanding.fetch_add(1)
         return t
@@ -101,7 +112,10 @@ class TaskPool:
             san.on_pool_release(task)
         self._outstanding.fetch_add(-1)
         if task.pooled:
-            self._pool.release(task)
+            if task.is_worksharing:
+                self._ws_pool.release(task)
+            else:
+                self._pool.release(task)
 
     @property
     def outstanding(self) -> int:
@@ -109,5 +123,6 @@ class TaskPool:
 
     @property
     def stats(self):
-        return {"allocs": self._pool.allocs, "reuses": self._pool.reuses,
+        return {"allocs": self._pool.allocs + self._ws_pool.allocs,
+                "reuses": self._pool.reuses + self._ws_pool.reuses,
                 "outstanding": self._outstanding.load()}

@@ -74,6 +74,21 @@ bounded, load-proportional delay. ``TaskRuntime(parking="eventcount")``
 selects the previous single-condition design (kept for the wake-latency
 ablation).
 
+Worksharing tasks (taskloop)
+----------------------------
+``taskloop(n_or_range, body, chunk=..., ...)`` executes a data-parallel
+loop as ONE pooled descriptor (``WorksharingTask``) instead of one task per
+iteration — the "worksharing tasks" primitive (Maroñas et al.). Loop-level
+dependencies are registered once through the ordinary dependency system;
+when the descriptor becomes ready it is posted on a *worksharing board*
+shared by every scheduler policy, the wake fan-out is sized to the number
+of claimable chunks, and idle workers whose queues are empty join the live
+loop and claim chunks off an atomic cursor. The LAST participant out
+merges per-participant reduction partials (``reduce=``/``reduce_init=``)
+and runs the normal completion path, so TaskGroup / taskwait / barrier /
+cancellation semantics are unchanged; group cancellation stops un-claimed
+chunks at the cursor. See docs/RUNTIME.md, "Worksharing tasks".
+
 Cancellation (TaskGroup.cancel)
 -------------------------------
 ``group.cancel()`` is cooperative and epoch-based: every task spawned into
@@ -102,8 +117,8 @@ from repro.core.deps_locked import LockedDependencySystem
 from repro.core.instrument import Tracer
 from repro.core.parking import PARKING_KINDS
 from repro.core.pool import TaskPool
-from repro.core.scheduler import SCHEDULER_KINDS
-from repro.core.task import DONE, Task, TaskRef
+from repro.core.scheduler import SCHEDULER_KINDS, WorksharingBoard
+from repro.core.task import DONE, Task, TaskRef, _NO_PARTIAL
 
 _current_task = threading.local()
 
@@ -119,6 +134,34 @@ _PARK_EWMA_MULT = 32.0          # timeout = MULT * EWMA(inter-arrival)
 
 def current_task() -> Optional[Task]:
     return getattr(_current_task, "t", None)
+
+
+# taskloop reduce= resolution: named ops with identities, or a callable
+# with an explicit initial value
+_REDUCE_OPS = {
+    "+": lambda a, b: a + b,
+    "*": lambda a, b: a * b,
+    "max": max,
+    "min": min,
+}
+_REDUCE_IDENTITY = {"+": 0, "*": 1}
+
+
+def _resolve_reduce(reduce, reduce_init):
+    if callable(reduce):
+        if reduce_init is None:
+            raise ValueError("taskloop: callable reduce= needs reduce_init=")
+        return reduce, reduce_init
+    fn = _REDUCE_OPS.get(reduce)
+    if fn is None:
+        raise ValueError(f"taskloop: unknown reduce op {reduce!r} "
+                         "(use '+', '*', 'max', 'min' or a callable)")
+    if reduce_init is None:
+        reduce_init = _REDUCE_IDENTITY.get(reduce)
+        if reduce_init is None:
+            raise ValueError(f"taskloop: reduce={reduce!r} has no identity; "
+                             "pass reduce_init=")
+    return fn, reduce_init
 
 
 class TaskGroup:
@@ -344,6 +387,10 @@ class TaskRuntime:
         # wake hook: every scheduler calls this once the task is visible to
         # consumers, so the single-wake decision sits next to the enqueue
         self.scheduler.on_enqueue = self._on_enqueue
+        # worksharing: live taskloop descriptors live on one board shared
+        # by every scheduler policy; idle workers claim chunks off it
+        self.ws_board = WorksharingBoard()
+        self.scheduler.set_ws_board(self.ws_board)
 
         self._live = AtomicU64(0)  # created-but-not-fully-finished tasks
         self._quiescent = threading.Event()
@@ -517,10 +564,17 @@ class TaskRuntime:
             task._cancel_epoch = cancel_epoch
         task.on_ready = self._task_ready
         task.created_ns = time.monotonic_ns()
-        # the ref must be stamped before the task is published to the
-        # dependency system: once registered it may run, finish and be
-        # recycled before spawn even returns
-        ref = TaskRef(task) if handle else None
+        ref = self._publish_task(task, group, parent, handle)
+        return ref if handle else task
+
+    def _publish_task(self, task: Task, group: Optional[TaskGroup],
+                      parent: Optional[Task],
+                      make_ref: bool) -> Optional[TaskRef]:
+        """Shared spawn/taskloop publication tail. The ref must be stamped
+        before the task is published to the dependency system: once
+        registered it may run, finish and be recycled before the spawning
+        call even returns."""
+        ref = TaskRef(task) if make_ref else None
         if parent is not None:
             parent._completion.fetch_add(1)  # spawner's body token is held
         if group is not None:
@@ -534,9 +588,100 @@ class TaskRuntime:
         if san is not None:
             # before registration: once published the task may run, finish
             # and be recycled on another worker before spawn returns
-            san.on_spawn(task, parent)
+            san.on_spawn(task, task.parent)
         self.deps.register_task(task, self._mailbox())
+        return ref
+
+    def taskloop(self, iterations, body: Callable, *, chunk=None,
+                 name: str = "", reads: Iterable = (), writes: Iterable = (),
+                 rw: Iterable = (), reductions: Iterable = (),
+                 commutative: Iterable = (), affinity: Optional[int] = None,
+                 parent: Optional[Task] = None, retain: bool = False,
+                 group: Optional[TaskGroup] = None, detached: bool = False,
+                 handle: bool = False, wait: bool = False,
+                 reduce=None, reduce_init=None):
+        """Execute a data-parallel loop as ONE worksharing task.
+
+        ``iterations`` is an int ``n`` (iterates ``[0, n)``) or a step-1
+        ``range``. ``body(lo, hi)`` is called once per claimed chunk with a
+        half-open sub-range; with ``reduce=`` set it is ``body(lo, hi, acc)
+        -> acc`` threading a per-participant private accumulator, and the
+        partials are merged ONCE by the last participant (``reduce`` is
+        ``'+'``/``'*'``/``'max'``/``'min'`` or a callable ``(a, b) -> a⊕b``
+        with an explicit ``reduce_init``).
+
+        ``chunk`` is the iterations-per-claim grain (``None``/``'auto'``
+        picks ~4 chunks per worker). Dependencies (``reads``/``writes``/
+        ``rw``/``reductions``/``commutative``) are LOOP-level: registered
+        once for the whole range through the ordinary dependency system.
+
+        Returns like ``spawn`` (Task / TaskRef with ``handle=True`` / None
+        when the group is cancelled) — except ``wait=True``, where the
+        caller participates in its own loop, blocks until the descriptor
+        fully finished, and gets the merged reduction result (or None).
+        """
+        if isinstance(iterations, range):
+            if iterations.step != 1:
+                raise ValueError("taskloop supports step-1 ranges only "
+                                 "(map other strides inside the body)")
+            start, stop = iterations.start, iterations.stop
+        else:
+            start, stop = 0, int(iterations)
+        n = max(0, stop - start)
+        if chunk is None or chunk == "auto":
+            # ~4 chunks per worker: enough slack that a straggler worker
+            # can be back-filled, few enough that claim overhead is noise
+            chunk = max(1, -(-n // (4 * max(1, self.n_workers))))
+        chunk = max(1, int(chunk))
+        if reduce is not None:
+            reduce, reduce_init = _resolve_reduce(reduce, reduce_init)
+        # group admission: same epoch-read-before-check contract as spawn
+        if group is not None:
+            cancel_epoch = group._cancel_epoch.load()
+            if group._cancelled:
+                self.tracer.event("task.cancel", 0)
+                return None
+        if parent is None and not detached:
+            parent = current_task()
+        task = self.pool.acquire_ws()
+        task.init(body, name=name or getattr(body, "__name__", "taskloop"),
+                  parent=parent, reads=reads, writes=writes, rw=rw,
+                  reductions=reductions, commutative=commutative,
+                  affinity=affinity)
+        task.init_loop(start, stop, chunk, body,
+                       reduce=reduce, reduce_init=reduce_init)
+        if retain:
+            task.pooled = False  # caller reads .result after completion
+        task.group = group
+        if group is not None:
+            task._cancel_epoch = cancel_epoch
+        task.on_ready = self._task_ready
+        task.created_ns = time.monotonic_ns()
+        box = None
+        if wait:
+            # one-slot box the finalizer fills: the merged result stays
+            # readable after the pooled descriptor is recycled
+            box = task._ws_result_box = []
+        ref = self._publish_task(task, group, parent, handle or wait)
+        if wait:
+            self._taskloop_wait(task, ref)
+            return box[0] if box else None
         return ref if handle else task
+
+    def _taskloop_wait(self, ws, ref: TaskRef) -> None:
+        """``wait=True``: the caller participates in its own loop (claims
+        chunks exactly like a worker) and then blocks until the descriptor
+        — including chunks claimed by other participants — finished. A join
+        that lands on the pool object's NEXT occupant (recycle race) just
+        helps that loop; ``ref.done`` is already True then."""
+        while not ref.done:
+            if ws.ws_join():
+                self._ws_participate(ws, getattr(_current_task, "wid", None))
+                break
+            # not yet open (loop dependencies pending) or already closing:
+            # timed waits keep this responsive either way
+            self.taskwait(ref, timeout=0.002)
+        self.taskwait(ref)
 
     def task_group(self, name: str = "",
                    cancel_on_error: bool = False) -> TaskGroup:
@@ -556,6 +701,9 @@ class TaskRuntime:
             san.on_task_ready(task)
         self.tracer.event("task.ready", task.task_id)
         self._observe_arrival(task.ready_ns)
+        if task.is_worksharing:
+            self._worksharing_ready(task)
+            return
         if self.scheduler_kind == "work-stealing":
             wid = getattr(_current_task, "wid", None)
             self.scheduler.add_ready_task(task, worker_id=wid)
@@ -563,6 +711,29 @@ class TaskRuntime:
             self.scheduler.add_ready_task(
                 task, numa_hint=task.affinity or 0)
         # the wake happens via the scheduler's on_enqueue hook
+
+    def _worksharing_ready(self, ws) -> None:
+        """A worksharing descriptor became READY: open it, post it on the
+        board (never into the task queues — every policy polls the board
+        on queue miss), and size the wake fan-out to the number of
+        claimable chunks instead of the usual single wake."""
+        ws.ws_publish()
+        if ws.ws_nchunks == 0:
+            # empty range: nothing to claim — complete the descriptor
+            # inline through the normal participation/finalize path
+            self._run_worksharing(ws, getattr(_current_task, "wid", None))
+            return
+        self.ws_board.post(ws)
+        self.tracer.event("sched.add", ws.task_id)
+        n = min(ws.ws_remaining() or 1, self.n_workers)
+        prefer_numa = ws.affinity if self._n_numa > 1 else None
+        woken = self._parking.wake_many(n, prefer_numa=prefer_numa)
+        if woken:
+            self.tracer.event("worker.wake", woken)
+        san = self.san
+        if san is not None:
+            san.on_enqueue_outcome(woken > 0, self._parking.n_idle,
+                                   self.scheduler.pending())
 
     # ---------------------------------------------------------------- work
     def _drop_token(self, task: Task):
@@ -606,6 +777,11 @@ class TaskRuntime:
         return parent
 
     def _run_task(self, task: Task, wid: int):
+        if task.is_worksharing:
+            # the scheduler hands a live worksharing descriptor to any idle
+            # worker (possibly several at once): participate, don't run()
+            self._run_worksharing(task, wid)
+            return
         san = self.san
         group = task.group
         observed_epoch = None if group is None \
@@ -641,6 +817,94 @@ class TaskRuntime:
             self.deps.unregister_task(task, self._mailbox())
             self.tracer.event("dep.unregister", task.task_id)
         self._drop_token(task)
+
+    # ---------------------------------------------------------- worksharing
+    def _run_worksharing(self, ws, wid: Optional[int]) -> None:
+        if not ws.ws_join():
+            return  # closed: raced the last participant's finalize
+        self._ws_participate(ws, wid)
+
+    def _ws_participate(self, ws, wid: Optional[int]) -> None:
+        """Claim and execute chunks until the cursor is exhausted (or the
+        loop cancelled/errored), then leave; the LAST participant out runs
+        :meth:`_finish_worksharing`. Caller must hold a successful
+        ``ws_join``."""
+        san = self.san
+        exp = self._explorer
+        tracer = self.tracer
+        group = ws.group
+        reduce_fn = ws.ws_reduce
+        acc = ws.ws_reduce_init
+        ran = 0
+        if not ws.start_ns:
+            ws.start_ns = time.monotonic_ns()  # first-ish participant
+        prev = getattr(_current_task, "t", None)
+        _current_task.t = ws  # nested spawns parent on the descriptor
+        if san is not None:
+            san.on_ws_join(ws, wid)
+        try:
+            while True:
+                if group is not None and \
+                        group._cancel_epoch.load() != ws._cancel_epoch:
+                    # cancellation stops un-claimed chunks at the cursor; a
+                    # chunk a peer is mid-way through is never interrupted
+                    if ws.ws_cancel():
+                        tracer.event("task.cancel", ws.task_id)
+                    break
+                if exp is not None:
+                    # each claim is a scheduling decision point: concurrent
+                    # participants may interleave between load and claim
+                    exp.yield_point("ws.claim")
+                idx = ws.ws_claim()
+                if idx is None:
+                    break
+                tracer.event("ws.claim", idx)
+                if san is not None:
+                    san.on_ws_claim(ws, idx)
+                lo, hi = ws.ws_bounds(idx)
+                try:
+                    if reduce_fn is not None:
+                        acc = ws.ws_body(lo, hi, acc)
+                    else:
+                        ws.ws_body(lo, hi)
+                except BaseException as e:  # first error wins, claims stop
+                    ws.ws_record_error(e)
+                    break
+                ran += 1
+        finally:
+            _current_task.t = prev
+            if san is not None:
+                san.on_ws_leave(ws)
+            partial = acc if (reduce_fn is not None and ran) else _NO_PARTIAL
+            if ws.ws_leave(partial):
+                self._finish_worksharing(ws, wid)
+
+    def _finish_worksharing(self, ws, wid: Optional[int]) -> None:
+        """Last participant out: merge the per-participant reduction
+        partials ONCE, flip the descriptor to DONE, then run the exact
+        completion tail of a normal task body (wait-free unregister +
+        completion-token drop -> finalize/retire/release), so TaskGroup /
+        taskwait / cancellation / pooling semantics hold unchanged."""
+        result = None
+        if ws.ws_reduce is not None:
+            result = ws.ws_reduce_init
+            for p in ws._ws_partials:
+                result = ws.ws_reduce(result, p)
+        self.ws_board.remove(ws)
+        cancelled = ws._ws_cancelled
+        box = ws._ws_result_box
+        if box is not None:
+            box.append(result)  # survives the descriptor's recycle
+        ws.ws_finish(result)
+        ws.end_ns = time.monotonic_ns()
+        self.tracer.event("ws.finalize", ws.task_id)
+        san = self.san
+        if san is not None:
+            san.on_ws_done(ws, cancelled=cancelled)
+        if not self._defer_unregister:
+            self.deps.unregister_task(ws, self._mailbox())
+            self.tracer.event("dep.unregister", ws.task_id)
+        self._drop_token(ws)
 
     # -------------------------------------------------------------- parking
     def _observe_arrival(self, now_ns: int):
@@ -689,15 +953,23 @@ class TaskRuntime:
             exp.register(f"w{wid}")
         spins = 0
         n_timeouts = 0
+        just_woken = False
         while not self._stop:
             if exp is not None:
                 exp.yield_point("worker.dequeue")
             task = self.scheduler.get_ready_task(wid)
             if task is not None:
+                just_woken = False
                 spins = 0
                 n_timeouts = 0
                 self._run_task(task, wid)
                 continue
+            if just_woken:
+                # woken from park but the first dequeue found nothing: the
+                # wake was spurious (idle churn the fan-out clamp exists
+                # to prevent) — counted so tests can assert zero
+                parking.spurious.fetch_add(1)
+                just_woken = False
             spins += 1
             if spins < _PARK_AFTER_SPINS and exp is None:
                 # under exploration the idle spin phase is skipped: the
@@ -717,8 +989,11 @@ class TaskRuntime:
                 n_timeouts = 0
                 # wake chaining: single-wake producers wake one worker per
                 # task; if more work is already queued while peers are
-                # still parked, pass the wake along
-                if parking.n_idle and self.scheduler.pending():
+                # still parked, pass the wake along — unless the surplus is
+                # already covered by in-flight (posted, unconsumed) wakes,
+                # which would over-wake workers into an empty queue
+                if parking.n_idle and \
+                        self.scheduler.pending() > parking.n_pending_wakes:
                     self._on_enqueue()
                 self._run_task(task, wid)
                 continue
@@ -734,6 +1009,7 @@ class TaskRuntime:
             if parking.park(wid, token, self._park_timeout(n_timeouts)):
                 n_timeouts = 0
                 spins = 0  # woken: poll, then spin briefly before re-park
+                just_woken = True
                 if san is not None:
                     san.on_worker_woken(wid)
             else:
@@ -817,4 +1093,5 @@ class TaskRuntime:
                 "parked": self._parking.n_parked,
                 "parks": self._parking.parks.load(),
                 "wakes": self._parking.wakes.load(),
+                "spurious_wakes": self._parking.spurious.load(),
                 "mailboxes": self._mb_pool.stats}

@@ -27,14 +27,76 @@ from repro.core.locks import DTLock, MutexLock, PTLock, spin
 from repro.core.spsc import SPSCQueue
 
 
+class WorksharingBoard:
+    """Registry of live worksharing descriptors (see core/task.py).
+
+    A descriptor is POSTED when it becomes ready and REMOVED by the last
+    participant at finalize; in between, idle workers that find their
+    queues empty poll the board and join the loop to claim chunks — before
+    parking, and (in the work-stealing policy) before stealing whole tasks.
+    The entry list is mutated with GIL-atomic list ops only; ``poll`` reads
+    it racily and is purely advisory, because ``ws_join`` re-validates
+    under the descriptor's own lock. A descriptor is served while it has
+    un-claimed chunks, and a *cancelled* one is still served until some
+    participant joins to run its finalize — otherwise a loop cancelled
+    before any worker saw it would never complete.
+    """
+
+    __slots__ = ("_entries",)
+
+    def __init__(self):
+        self._entries: list = []
+
+    def post(self, ws) -> None:
+        self._entries.append(ws)
+
+    def remove(self, ws) -> None:
+        try:
+            self._entries.remove(ws)
+        except ValueError:
+            pass  # already removed (idempotent under races)
+
+    def poll(self):
+        entries = self._entries
+        if not entries:
+            return None
+        for ws in tuple(entries):
+            if ws.ws_needs_service():
+                return ws
+        return None
+
+    def pending(self) -> int:
+        """Work units still claimable: remaining chunks per open loop, and
+        1 for a cancelled-but-unfinalized loop (someone must serve it)."""
+        entries = self._entries
+        if not entries:
+            return 0
+        n = 0
+        for ws in tuple(entries):
+            r = ws.ws_remaining()
+            if r:
+                n += r
+            elif ws.ws_needs_service():
+                n += 1
+        return n
+
+    def __len__(self):
+        return len(self._entries)
+
+
 class UnsyncScheduler:
     """Policy container. NOT thread safe by design (callers synchronize)."""
+
+    ws_board = None  # worksharing descriptor board (set_ws_board installs)
 
     def __init__(self, policy: str = "fifo"):
         self.policy = policy
         self._q = deque()
         self._local: dict[int, deque] = {}
         self.on_enqueue = None  # wake hook (top-level standalone use only)
+
+    def set_ws_board(self, board: WorksharingBoard) -> None:
+        self.ws_board = board
 
     def add_ready_task(self, task):
         hint = getattr(task, "affinity", None)
@@ -58,12 +120,18 @@ class UnsyncScheduler:
             for q in self._local.values():
                 if q:
                     return q.popleft()
-            return None
+            return self._poll_ws()
         if not self._q:
-            return None
+            return self._poll_ws()
         if self.policy == "lifo":
             return self._q.pop()
         return self._q.popleft()
+
+    def _poll_ws(self):
+        # queues empty: join a live worksharing loop before giving up —
+        # whole tasks keep priority, chunk claiming fills idle capacity
+        board = self.ws_board
+        return board.poll() if board is not None else None
 
     def __len__(self):
         return len(self._q) + sum(len(q) for q in self._local.values())
@@ -81,6 +149,7 @@ class SyncScheduler:
     """
 
     _explorer = None  # taskcheck hook; instance attr when installed
+    ws_board = None   # worksharing descriptor board
 
     def __init__(self, n_workers: int, policy: str = "fifo",
                  n_numa: int = 1, spsc_capacity: int = 256,
@@ -95,6 +164,13 @@ class SyncScheduler:
         self._instr = instrument
         self._max_add_spins = max_add_spins
         self.on_enqueue = None  # wake hook: called after the task is visible
+
+    def set_ws_board(self, board: WorksharingBoard) -> None:
+        # the inner container serves the board on the owner/serve paths;
+        # the outer reference covers the delegated-miss path (a delegator
+        # that got no task can still claim chunks without the DTLock)
+        self.ws_board = board
+        self._sched.set_ws_board(board)
 
     # -- producer side ------------------------------------------------
     def add_ready_task(self, task, numa_hint: int = 0):
@@ -175,6 +251,10 @@ class SyncScheduler:
         if not acquired:
             if self._instr:
                 self._instr.event("sched.delegated", worker_id)
+            if item is None and self.ws_board is not None:
+                # served nothing: a live worksharing loop is claimable
+                # without taking the DTLock at all
+                return self.ws_board.poll()
             return item
         try:
             self._process_ready_tasks()
@@ -185,17 +265,26 @@ class SyncScheduler:
         return task
 
     def pending(self) -> int:
-        return len(self._sched) + sum(len(q) for q in self._add_queues)
+        n = len(self._sched) + sum(len(q) for q in self._add_queues)
+        if self.ws_board is not None:
+            n += self.ws_board.pending()
+        return n
 
 
 class GlobalLockScheduler:
     """−DTLock ablation: a single PTLock serializes add & get (paper §3)."""
+
+    ws_board = None  # worksharing descriptor board
 
     def __init__(self, n_workers: int, policy: str = "fifo",
                  lock_cls=PTLock, **kw):
         self._sched = UnsyncScheduler(policy)
         self._lock = lock_cls(max(64, 2 * n_workers))
         self.on_enqueue = None  # wake hook: called after the task is visible
+
+    def set_ws_board(self, board: WorksharingBoard) -> None:
+        self.ws_board = board
+        self._sched.set_ws_board(board)
 
     def add_ready_task(self, task, numa_hint: int = 0):
         self._lock.lock()
@@ -215,7 +304,10 @@ class GlobalLockScheduler:
         return task
 
     def pending(self) -> int:
-        return len(self._sched)
+        n = len(self._sched)
+        if self.ws_board is not None:
+            n += self.ws_board.pending()
+        return n
 
 
 class WorkStealingScheduler:
@@ -238,6 +330,10 @@ class WorkStealingScheduler:
         self._rngs = [random.Random(seed * 0x9E3779B1 + wid)
                       for wid in range(self.n)]
         self.on_enqueue = None  # wake hook: called after the task is visible
+        self.ws_board = None    # worksharing descriptor board
+
+    def set_ws_board(self, board: WorksharingBoard) -> None:
+        self.ws_board = board
 
     def add_ready_task(self, task, numa_hint: int = 0, worker_id: Optional[int] = None):
         wid = worker_id if worker_id is not None else 0
@@ -259,6 +355,13 @@ class WorkStealingScheduler:
             self._lks[i].unlock()
         if task is not None:
             return task
+        # own queue empty: claim chunks from a live worksharing loop BEFORE
+        # stealing whole tasks (the cheap, contention-free work source)
+        board = self.ws_board
+        if board is not None:
+            ws = board.poll()
+            if ws is not None:
+                return ws
         # steal FIFO from a random victim (per-worker RNG)
         start = self._rngs[i].randrange(self.n)
         for k in range(self.n):
@@ -275,7 +378,10 @@ class WorkStealingScheduler:
         return None
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._qs)
+        n = sum(len(q) for q in self._qs)
+        if self.ws_board is not None:
+            n += self.ws_board.pending()
+        return n
 
 
 SCHEDULER_KINDS = {

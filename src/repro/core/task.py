@@ -40,6 +40,10 @@ class Task:
                  "pooled", "generation", "group", "_lineage_keys",
                  "_cancel_epoch", "_san_node")
 
+    # dispatch flag: the runtime routes WorksharingTask descriptors through
+    # the chunk-participation path instead of run() (class attr, no slot)
+    is_worksharing = False
+
     def __init__(self):
         self.generation = 0
         self.reset()
@@ -155,6 +159,172 @@ class Task:
     def __repr__(self):
         return (f"Task#{self.task_id}({self.name}, state={self.state}, "
                 f"gen={self.generation})")
+
+
+_NO_PARTIAL = object()  # ws_leave sentinel: participant ran zero chunks
+
+
+class WorksharingTask(Task):
+    """One pooled descriptor for a whole data-parallel loop (worksharing
+    tasks, Maroñas et al.): a half-open iteration range ``[ws_start,
+    ws_stop)``, a chunk size, and an atomic chunk-claim cursor. Instead of
+    one pooled Task per iteration, idle workers *join* the live descriptor
+    and collaboratively claim chunks off the cursor; the last participant
+    out runs the normal completion path. Loop-level dependencies are
+    declared once on the descriptor and registered through the ordinary
+    dependency systems — the descriptor is a Task everywhere except
+    execution, which goes through the claim protocol below instead of
+    ``run()``.
+
+    Protocol (all lifecycle transitions under ``_ws_lock``; claiming is a
+    single ``fetch_add`` off the lock):
+
+    * ``ws_publish`` opens the descriptor (called when it becomes READY,
+      right before it is posted on the scheduler's worksharing board);
+    * ``ws_join`` registers a participant — refused once the descriptor
+      closed, which is also what makes *stale* joins harmless: a worker
+      holding a recycled object either gets refused, or joins the pool
+      object's NEW live loop and simply helps it;
+    * ``ws_claim`` hands out the next chunk index (None when exhausted or
+      cancelled — cancellation stops un-claimed chunks at the cursor);
+    * ``ws_leave`` deposits the participant's private reduction partial and
+      returns True for exactly one caller — the last participant out of a
+      fully-claimed (or cancelled) loop — who then merges partials and
+      finalizes through the completion-token path.
+    """
+
+    is_worksharing = True
+
+    __slots__ = ("ws_start", "ws_stop", "ws_chunk", "ws_body", "ws_reduce",
+                 "ws_reduce_init", "ws_nchunks", "_ws_cursor", "_ws_active",
+                 "_ws_open", "_ws_cancelled", "_ws_lock", "_ws_partials",
+                 "_ws_result_box")
+
+    def reset(self):
+        super().reset()
+        try:
+            self._ws_lock
+        except AttributeError:  # first reset (from __init__)
+            self._ws_lock = threading.Lock()
+            self._ws_cursor = AtomicU64(0)
+        self.ws_start = 0
+        self.ws_stop = 0
+        self.ws_chunk = 1
+        self.ws_body = None
+        self.ws_reduce = None
+        self.ws_reduce_init = None
+        self.ws_nchunks = 0
+        self._ws_cursor.store(0)
+        self._ws_active = 0
+        self._ws_open = False
+        self._ws_cancelled = False
+        self._ws_partials = []
+        self._ws_result_box = None
+
+    def init_loop(self, start: int, stop: int, chunk: int, body,
+                  reduce=None, reduce_init=None):
+        n = max(0, stop - start)
+        self.ws_start = start
+        self.ws_stop = stop
+        self.ws_chunk = max(1, chunk)
+        self.ws_body = body
+        self.ws_reduce = reduce
+        self.ws_reduce_init = reduce_init
+        self.ws_nchunks = -(-n // self.ws_chunk) if n else 0
+        self._ws_cursor.store(0)
+        self._ws_active = 0
+        self._ws_open = False
+        self._ws_cancelled = False
+        self._ws_partials = []
+        self._ws_result_box = None
+        return self
+
+    # ------------------------------------------------------------ protocol
+    def ws_publish(self) -> None:
+        with self._ws_lock:
+            self._ws_open = True
+
+    def ws_join(self) -> bool:
+        with self._ws_lock:
+            if not self._ws_open:
+                return False
+            self._ws_active += 1
+            return True
+
+    def ws_claim(self) -> Optional[int]:
+        if self._ws_cancelled:
+            return None
+        idx = self._ws_cursor.fetch_add(1)
+        return idx if idx < self.ws_nchunks else None
+
+    def ws_bounds(self, idx: int) -> tuple:
+        lo = self.ws_start + idx * self.ws_chunk
+        return lo, min(lo + self.ws_chunk, self.ws_stop)
+
+    def ws_leave(self, partial=_NO_PARTIAL) -> bool:
+        """Deregister a participant. True for exactly the LAST participant
+        out of an exhausted/cancelled loop — the closing transition that
+        makes later joins refuse."""
+        with self._ws_lock:
+            if partial is not _NO_PARTIAL:
+                self._ws_partials.append(partial)
+            self._ws_active -= 1
+            if self._ws_active == 0 and self._ws_open and (
+                    self._ws_cancelled
+                    or self._ws_cursor.load() >= self.ws_nchunks):
+                self._ws_open = False
+                return True
+            return False
+
+    def ws_cancel(self) -> bool:
+        """Stop handing out un-claimed chunks. True once, for the caller
+        that flipped the flag."""
+        if self._ws_cancelled:
+            return False
+        self._ws_cancelled = True
+        return True
+
+    def ws_record_error(self, exc: BaseException) -> None:
+        """First body exception wins; also stops further chunk claims."""
+        with self._ws_lock:
+            if self.exception is None:
+                self.exception = exc
+        self._ws_cancelled = True
+
+    # -------------------------------------------------------------- status
+    def ws_remaining(self) -> int:
+        if not self._ws_open or self._ws_cancelled:
+            return 0
+        return max(0, self.ws_nchunks - self._ws_cursor.load())
+
+    def ws_needs_service(self) -> bool:
+        """Board poll predicate (racy read — ``ws_join`` re-validates):
+        open with un-claimed chunks, or open-and-cancelled with nobody yet
+        joined to run the finalize."""
+        return self._ws_open and (
+            self._ws_cancelled or self._ws_cursor.load() < self.ws_nchunks)
+
+    # ----------------------------------------------------------- lifecycle
+    def run(self):
+        raise AssertionError(
+            "WorksharingTask must go through the chunk-claim protocol "
+            "(runtime._run_worksharing), never run()")
+
+    def ws_finish(self, result=None) -> None:
+        """Last participant: publish the merged result and flip to DONE
+        (same observer protocol as run()/skip())."""
+        self.result = result
+        self.state = DONE
+        ev = self._done_event
+        if ev is not None:
+            ev.set()
+
+    def __repr__(self):
+        return (f"WorksharingTask#{self.task_id}({self.name}, "
+                f"range=[{self.ws_start},{self.ws_stop}), "
+                f"chunk={self.ws_chunk}, "
+                f"cursor={self._ws_cursor.load()}/{self.ws_nchunks}, "
+                f"state={self.state}, gen={self.generation})")
 
 
 class TaskRef:

@@ -30,19 +30,35 @@ class TokenSource:
         if self.path:
             self._mm = np.memmap(self.path, dtype=self.dtype, mode="r")
 
-    def batch(self, step: int, batch_size: int, seq_len: int,
-              shard: int = 0, n_shards: int = 1) -> np.ndarray:
-        """Deterministic (step, shard) -> tokens (batch_size, seq_len)."""
+    def batch_rows(self, step: int, lo: int, hi: int, out: np.ndarray,
+                   shard: int = 0, n_shards: int = 1) -> None:
+        """Fill rows ``[lo, hi)`` of ``out`` for batch ``step``. The stream
+        is deterministic PER ROW — synthetic rows derive their RNG from
+        (seed, step, shard, row) — so any chunking of the row range (and
+        therefore any worker count / taskloop grain) produces the
+        identical batch."""
+        batch_size, seq_len = out.shape
         if self._mm is not None:
             n = len(self._mm)
             per = batch_size * seq_len
             off = (step * n_shards + shard) * per % max(1, n - per)
-            flat = np.asarray(self._mm[off:off + per], dtype=np.int32)
-            return flat.reshape(batch_size, seq_len) % self.vocab_size
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, step, shard]))
-        return rng.integers(0, self.vocab_size,
-                            size=(batch_size, seq_len), dtype=np.int32)
+            flat = np.asarray(self._mm[off + lo * seq_len:
+                                       off + hi * seq_len], dtype=np.int32)
+            out[lo:hi] = flat.reshape(hi - lo, seq_len) % self.vocab_size
+            return
+        for r in range(lo, hi):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, shard, r]))
+            out[r] = rng.integers(0, self.vocab_size, size=seq_len,
+                                  dtype=np.int32)
+
+    def batch(self, step: int, batch_size: int, seq_len: int,
+              shard: int = 0, n_shards: int = 1) -> np.ndarray:
+        """Deterministic (step, shard) -> tokens (batch_size, seq_len)."""
+        out = np.empty((batch_size, seq_len), dtype=np.int32)
+        self.batch_rows(step, 0, batch_size, out, shard=shard,
+                        n_shards=n_shards)
+        return out
 
 
 # Dependency-address window for batch resources. Steps are an unbounded
@@ -80,8 +96,26 @@ class DataPipeline:
 
     def _produce(self, step: int):
         self.rt.tracer.event("data.prefetch", step)
-        tokens = self.source.batch(step, self.batch_size, self.seq_len,
-                                   self.shard, self.n_shards)
+        src = self.source
+        cls = type(src)
+        if cls.batch is TokenSource.batch \
+                or cls.batch_rows is not TokenSource.batch_rows:
+            # row-addressable source: materialize the batch as a nested
+            # worksharing loop so idle workers fill row blocks in parallel
+            # (the per-row RNG derivation keeps the stream identical under
+            # any chunking). Sources that override batch() only keep the
+            # single-call path below.
+            tokens = np.empty((self.batch_size, self.seq_len),
+                              dtype=np.int32)
+            self.rt.taskloop(
+                self.batch_size,
+                lambda lo, hi: src.batch_rows(step, lo, hi, tokens,
+                                              shard=self.shard,
+                                              n_shards=self.n_shards),
+                name=f"rows:{step}", wait=True)
+        else:
+            tokens = src.batch(step, self.batch_size, self.seq_len,
+                               self.shard, self.n_shards)
         batch = {"tokens": tokens}
         if self.frames_dim:
             rng = np.random.default_rng(

@@ -115,6 +115,43 @@ def test_dtlock_delegation_protocol():
             assert item == f"task-{wid}"
 
 
+def test_advance_bumps_tail_before_publishing_grant():
+    """The waitq store is the ownership-transfer point: the granted waiter
+    may resume and run owner-side operations (which read the plain ``_tail``
+    field) the instant it lands. ``_advance`` must therefore bump ``_tail``
+    BEFORE the store — publishing first let the old owner's ``_tail += 1``
+    race the new owner's, double-granting tickets and stranding delegated
+    items (an intermittent lost-task hang at fine granularity). This pins
+    the order deterministically by probing ``_tail`` inside the store."""
+    for lock_cls in (PTLock, DTLock):
+        lk = lock_cls(64)
+        observed = []
+
+        class ProbeSlot:
+            def __init__(self, inner):
+                self._inner = inner
+
+            def store(self, value):
+                # at publish time the bookkeeping must already be done:
+                # the granted ticket is `value`, so _tail == value + 1
+                observed.append((value, lk._tail))
+                self._inner.store(value)
+
+            def load(self):
+                return self._inner.load()
+
+        lk._waitq = [ProbeSlot(s) for s in lk._waitq]
+        lk.lock()
+        lk.unlock()
+        lk.lock()
+        lk.unlock()
+        assert observed, "unlock never published a grant"
+        for value, tail_at_store in observed:
+            assert tail_at_store == value + 1, (
+                f"{lock_cls.__name__}: grant for ticket {value} published "
+                f"with _tail={tail_at_store} (bookkeeping not yet done)")
+
+
 if st is None:
     def test_property_counter_increments():
         pytest.importorskip("hypothesis")

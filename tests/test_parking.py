@@ -197,6 +197,58 @@ def test_wake_one_prefers_numa_and_wid():
     assert results[0] is False and results[2] is False, results
 
 
+def test_wake_many_wakes_exactly_n_distinct_workers():
+    """The worksharing fan-out primitive: wake_many(k) reaches k DISTINCT
+    parked workers (never re-bumping one slot k times), and stops early
+    once the idle set is exhausted."""
+    lot = ParkingLot(8)
+    woken = []
+    lock = threading.Lock()
+
+    def worker(wid):
+        token = lot.begin_poll(wid)
+        if lot.park(wid, token, timeout=2.0):
+            with lock:
+                woken.append(wid)
+
+    ths = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for t in ths:
+        t.start()
+    deadline = time.monotonic() + 2.0
+    while lot.n_parked < 8 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert lot.wake_many(0) == 0
+    assert lot.wake_many(3) == 3
+    for t in ths:
+        t.join(timeout=5)
+    assert len(woken) == 3 and len(set(woken)) == 3, woken
+    # idle set exhausted: a large burst reports only what it reached
+    assert lot.wake_many(5) == 0
+
+
+def test_wake_many_clamps_to_slot_count():
+    lot = ParkingLot(2)
+    woken = []
+    lock = threading.Lock()
+
+    def worker(wid):
+        token = lot.begin_poll(wid)
+        if lot.park(wid, token, timeout=2.0):
+            with lock:
+                woken.append(wid)
+
+    ths = [threading.Thread(target=worker, args=(w,)) for w in range(2)]
+    for t in ths:
+        t.start()
+    deadline = time.monotonic() + 2.0
+    while lot.n_parked < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert lot.wake_many(100) == 2
+    for t in ths:
+        t.join(timeout=5)
+    assert sorted(woken) == [0, 1], woken
+
+
 def test_no_lost_wakeup_publish_then_enqueue_race():
     """The futex protocol: whatever interleaving, a task enqueued around
     begin_poll is either seen by the re-poll or wakes the parked worker."""
@@ -284,6 +336,24 @@ def test_wake_latency_bounded(parking):
     # worst case far under a single 250ms timeout cycle
     assert lat[len(lat) // 2] < 0.05, f"median wake {lat[len(lat)//2]}s"
     assert lat[-1] < 2.0, f"max wake {lat[-1]}s"
+
+
+def test_taskloop_wake_fanout_no_spurious_wakes():
+    """A 2-chunk taskloop against 8 fully-parked workers must wake at most
+    2 of them, and NO woken worker may find an empty queue: the fan-out is
+    clamped to claimable chunks and the wake-chain clamp stops the surplus
+    (the spurious counter is the idle-churn regression guard)."""
+    rt = TaskRuntime(n_workers=8).start()
+    time.sleep(0.3)  # everyone parks
+    wakes0 = rt._parking.wakes.load()
+    spurious0 = rt._parking.spurious.load()
+    rt.taskloop(2, lambda lo, hi: time.sleep(0.2), chunk=1)
+    assert rt.barrier(timeout=30)
+    wakes = rt._parking.wakes.load() - wakes0
+    spurious = rt._parking.spurious.load() - spurious0
+    rt.shutdown()
+    assert 1 <= wakes <= 2, f"2-chunk loop posted {wakes} wakes"
+    assert spurious == 0, f"{spurious} woken worker(s) found no work"
 
 
 def test_adaptive_park_timeout_clamps_and_backs_off():

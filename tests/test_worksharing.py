@@ -1,0 +1,331 @@
+"""Worksharing tasks (``runtime.taskloop``) — correctness across every
+scheduler policy and both dependency systems.
+
+Pins the PR-8 contract: one pooled descriptor per loop, chunks claimed
+collaboratively by idle workers off the worksharing board, loop-level
+dependencies registered once through the normal ASM/locked paths, the last
+participant out finalizing through the standard completion-token tail
+(taskwait / TaskGroup / cancellation / pool accounting unchanged), and
+per-participant partial-reduction slots merged once at finalize.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import TaskRuntime, WorksharingTask
+from repro.core.task import DONE
+
+SCHEDULERS = ["delegation", "global-lock", "work-stealing"]
+DEPS = ["waitfree", "locked"]
+
+
+def _drain_pool(rt, timeout=5.0) -> int:
+    deadline = time.monotonic() + timeout
+    while rt.pool.outstanding and time.monotonic() < deadline:
+        time.sleep(0.005)
+    return rt.pool.outstanding
+
+
+# --------------------------------------------------------- basic execution
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+@pytest.mark.parametrize("deps", DEPS)
+def test_taskloop_covers_every_iteration(scheduler, deps):
+    rt = TaskRuntime(n_workers=4, scheduler=scheduler, deps=deps).start()
+    out = [0] * 500
+    def fill(lo, hi):
+        for i in range(lo, hi):
+            out[i] += 1
+    rt.taskloop(500, fill, chunk=7)
+    assert rt.barrier(timeout=30)
+    assert out == [1] * 500, "every iteration exactly once"
+    assert len(rt.ws_board) == 0, "descriptor left on the board"
+    assert _drain_pool(rt) == 0
+    rt.shutdown()
+
+
+@pytest.mark.parametrize("chunk", [1, 8, 64, 1000, None])
+def test_taskloop_chunk_variants(chunk):
+    rt = TaskRuntime(n_workers=4).start()
+    out = [0] * 100
+    rt.taskloop(100, lambda lo, hi: out.__setitem__(
+        slice(lo, hi), [1] * (hi - lo)), chunk=chunk)
+    assert rt.barrier(timeout=30)
+    assert out == [1] * 100, (chunk, out.count(1))
+    rt.shutdown()
+
+
+def test_taskloop_accepts_range_and_rejects_strides():
+    rt = TaskRuntime(n_workers=2).start()
+    got = rt.taskloop(range(10, 20),
+                      lambda lo, hi, a: a + sum(range(lo, hi)),
+                      reduce="+", wait=True)
+    assert got == sum(range(10, 20))
+    with pytest.raises(ValueError):
+        rt.taskloop(range(0, 10, 2), lambda lo, hi: None)
+    # negative counts are empty, matching range(-3)
+    assert rt.taskloop(-3, lambda lo, hi, a: a, reduce="+", wait=True) == 0
+    rt.shutdown()
+
+
+def test_taskloop_empty_range_completes():
+    rt = TaskRuntime(n_workers=2).start()
+    assert rt.taskloop(0, lambda lo, hi: None, wait=True) is None
+    ref = rt.taskloop(0, lambda lo, hi: None, handle=True)
+    assert rt.taskwait(ref, timeout=10)
+    assert rt.barrier(timeout=10)
+    assert _drain_pool(rt) == 0
+    rt.shutdown()
+
+
+# ------------------------------------------------------------- reductions
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_taskloop_reduce_sum(scheduler):
+    rt = TaskRuntime(n_workers=4, scheduler=scheduler).start()
+    data = list(range(1000))
+    got = rt.taskloop(1000, lambda lo, hi, acc: acc + sum(data[lo:hi]),
+                      chunk=13, reduce="+", wait=True)
+    assert got == sum(data)
+    rt.shutdown()
+
+
+def test_taskloop_reduce_max_and_callable():
+    rt = TaskRuntime(n_workers=4).start()
+    data = [(i * 7919) % 1000 for i in range(500)]
+    got = rt.taskloop(500, lambda lo, hi, acc: max(acc, max(data[lo:hi])),
+                      chunk=9, reduce="max", reduce_init=-1, wait=True)
+    assert got == max(data)
+    got = rt.taskloop(500, lambda lo, hi, acc: acc + (hi - lo),
+                      chunk=11, reduce=lambda a, b: a + b, reduce_init=0,
+                      wait=True)
+    assert got == 500
+    # max/min and bare callables have no universal identity element
+    with pytest.raises(ValueError):
+        rt.taskloop(10, lambda lo, hi, a: a, reduce="max")
+    with pytest.raises(ValueError):
+        rt.taskloop(10, lambda lo, hi, a: a, reduce=lambda a, b: a)
+    with pytest.raises(ValueError):
+        rt.taskloop(10, lambda lo, hi, a: a, reduce="nope")
+    rt.shutdown()
+
+
+def test_taskloop_wait_result_survives_recycling():
+    """wait=True reads the result through the out-of-band box, so the
+    answer is correct even after the descriptor was recycled."""
+    rt = TaskRuntime(n_workers=4).start()
+    for k in range(20):  # churn the ws freelist
+        got = rt.taskloop(64, lambda lo, hi, a: a + (hi - lo), chunk=4,
+                          reduce="+", wait=True)
+        assert got == 64, (k, got)
+    rt.shutdown()
+
+
+# ------------------------------------------------------------ dependencies
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+@pytest.mark.parametrize("deps", DEPS)
+def test_taskloop_orders_against_tasks_via_accesses(scheduler, deps):
+    """writer task -> taskloop(rw) -> reader task, all through one
+    address: loop-level deps go through the ordinary dependency system."""
+    rt = TaskRuntime(n_workers=4, scheduler=scheduler, deps=deps).start()
+    data = [0] * 200
+    order = []
+    rt.spawn(lambda: (data.__setitem__(slice(None), [1] * 200),
+                      order.append("w")), writes=["d"])
+    def bump(lo, hi):
+        for i in range(lo, hi):
+            data[i] += 1
+    rt.taskloop(200, bump, chunk=16, rw=["d"])
+    rt.spawn(lambda: order.append(("r", min(data), max(data))), reads=["d"])
+    assert rt.barrier(timeout=30)
+    assert order[0] == "w"
+    assert order[1] == ("r", 2, 2), order
+    rt.shutdown()
+
+
+def test_taskloop_chain_of_loops_serializes():
+    rt = TaskRuntime(n_workers=4).start()
+    data = [0] * 100
+    for _ in range(5):
+        def bump(lo, hi):
+            for i in range(lo, hi):
+                data[i] += 1
+        rt.taskloop(100, bump, chunk=8, rw=["d"])
+    assert rt.barrier(timeout=30)
+    assert data == [5] * 100
+    rt.shutdown()
+
+
+def test_taskwait_on_taskloop_handle():
+    rt = TaskRuntime(n_workers=4).start()
+    out = [0] * 50
+    ref = rt.taskloop(50, lambda lo, hi: out.__setitem__(
+        slice(lo, hi), [1] * (hi - lo)), chunk=4, handle=True)
+    assert rt.taskwait(ref, timeout=30)
+    assert out == [1] * 50
+    rt.shutdown()
+
+
+# ---------------------------------------------------------- nested spawns
+def test_taskloop_body_spawns_children():
+    """Chunk bodies spawn ordinary tasks parented on the descriptor: the
+    loop's completion (and taskwait on it) covers the whole subtree."""
+    from repro.core import current_task
+    rt = TaskRuntime(n_workers=4).start()
+    out = []
+    lock = threading.Lock()
+
+    def body(lo, hi):
+        for i in range(lo, hi):
+            rt.spawn(lambda i=i: (lock.__enter__(), out.append(i),
+                                  lock.__exit__(None, None, None)),
+                     parent=current_task())
+
+    ref = rt.taskloop(40, body, chunk=5, handle=True)
+    assert rt.taskwait(ref, timeout=30)
+    assert sorted(out) == list(range(40)), "children done before the wait"
+    assert rt.barrier(timeout=30)
+    assert _drain_pool(rt) == 0
+    rt.shutdown()
+
+
+# ------------------------------------------------------------- exceptions
+def test_taskloop_exception_stops_claims_and_propagates():
+    rt = TaskRuntime(n_workers=2).start()
+    ran = []
+    lock = threading.Lock()
+
+    def body(lo, hi):
+        with lock:
+            ran.append(lo)
+        if lo == 0:
+            raise RuntimeError("chunk boom")
+        time.sleep(0.001)
+
+    ref = rt.taskloop(100, body, chunk=1, handle=True)
+    assert rt.taskwait(ref, timeout=30)
+    assert rt.barrier(timeout=30)
+    assert len(ran) < 100, "error must stop un-claimed chunks"
+    assert _drain_pool(rt) == 0
+    with pytest.raises(RuntimeError, match="chunk boom"):
+        rt.shutdown()
+
+
+# ------------------------------------------------------------ cancellation
+@pytest.mark.parametrize("deps", DEPS)
+def test_group_cancel_stops_unclaimed_chunks(deps):
+    """Cancelling the group mid-loop: chunks already executing finish,
+    un-claimed chunks never run, the descriptor finalizes through the
+    normal path and the pool returns to baseline."""
+    rt = TaskRuntime(n_workers=2, deps=deps).start()
+    g = rt.task_group("ws-cancel")
+    started = threading.Event()
+    ran = [0]
+    lock = threading.Lock()
+
+    def body(lo, hi):
+        started.set()
+        with lock:
+            ran[0] += 1
+        time.sleep(0.005)
+
+    ref = rt.taskloop(200, body, chunk=1, group=g, handle=True)
+    assert started.wait(10)
+    g.cancel()
+    assert g.wait(timeout=30)
+    assert rt.taskwait(ref, timeout=30)
+    assert rt.barrier(timeout=30)
+    assert ran[0] < 200, "cancel must stop un-claimed chunks"
+    assert len(rt.ws_board) == 0
+    assert _drain_pool(rt) == 0, "cancelled loop leaked pooled tasks"
+    assert rt._live.load() == 0
+    rt.shutdown()
+
+
+def test_group_cancel_before_ready_drops_whole_loop():
+    """A loop queued behind a blocker when the cancel lands: zero chunks
+    run, completion still flows."""
+    rt = TaskRuntime(n_workers=1).start()
+    g = rt.task_group("pre-cancel")
+    gate = threading.Event()
+    ran = [0]
+    g.spawn(lambda: gate.wait(10))
+    rt.taskloop(50, lambda lo, hi: ran.__setitem__(0, ran[0] + 1),
+                chunk=5, group=g, rw=["k"])
+    g.cancel()
+    gate.set()
+    assert g.wait(timeout=30)
+    assert rt.barrier(timeout=30)
+    assert ran[0] == 0, "chunks ran although the group was cancelled"
+    assert _drain_pool(rt) == 0
+    rt.shutdown()
+
+
+def test_cancelled_group_refuses_taskloop_admission():
+    rt = TaskRuntime(n_workers=2).start()
+    g = rt.task_group("closed")
+    g.cancel()
+    assert rt.taskloop(10, lambda lo, hi: None, group=g) is None
+    assert g.wait(timeout=10)
+    rt.shutdown()
+
+
+# ---------------------------------------------------------- collaboration
+def test_multiple_workers_participate():
+    """With slow chunks and several workers, more than one worker must
+    claim from the same descriptor — the point of worksharing."""
+    rt = TaskRuntime(n_workers=4).start()
+    tids = set()
+    lock = threading.Lock()
+
+    def body(lo, hi):
+        with lock:
+            tids.add(threading.get_ident())
+        time.sleep(0.01)
+
+    rt.taskloop(16, body, chunk=1)
+    assert rt.barrier(timeout=30)
+    assert len(tids) >= 2, f"only {len(tids)} worker(s) participated"
+    rt.shutdown()
+
+
+def test_descriptor_reuse_roundtrips():
+    """Descriptors come from their own freelist and are recycled; the
+    generation stamp makes taskwait on an old handle return immediately."""
+    rt = TaskRuntime(n_workers=2).start()
+    refs = []
+    for _ in range(10):
+        refs.append(rt.taskloop(20, lambda lo, hi: None, chunk=2,
+                                handle=True))
+    assert rt.barrier(timeout=30)
+    for ref in refs:
+        assert rt.taskwait(ref, timeout=5)
+    assert _drain_pool(rt) == 0
+    # same-thread freelist roundtrip: the recycled object comes back with a
+    # new generation, so an old handle's taskwait returns immediately
+    ws = rt.pool.acquire_ws()
+    gen = ws.generation
+    ws.retire()
+    rt.pool.release(ws)
+    ws2 = rt.pool.acquire_ws()
+    assert ws2 is ws and ws2.generation > gen
+    ws2.retire()
+    rt.pool.release(ws2)
+    rt.shutdown()
+
+
+def test_worksharing_task_state_machine():
+    ws = WorksharingTask()
+    ws.reset()
+    ws.init(lambda lo, hi: None)
+    ws.init_loop(0, 10, 3, lambda lo, hi: None)
+    assert ws.ws_nchunks == 4
+    assert ws.ws_bounds(3) == (9, 10)  # tail chunk clipped
+    assert not ws.ws_join(), "join before publish must be refused"
+    ws.ws_publish()
+    assert ws.ws_join()
+    assert [ws.ws_claim() for _ in range(5)] == [0, 1, 2, 3, None]
+    assert ws.ws_remaining() == 0
+    assert ws.ws_leave(), "last participant out closes the descriptor"
+    assert not ws.ws_join(), "join after close must be refused"
+    ws.ws_finish(None)
+    assert ws.state == DONE
