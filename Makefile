@@ -2,7 +2,7 @@
 # ROADMAP.md; no install step is needed.
 PY ?= python
 
-.PHONY: verify lint sanitize-smoke explore-smoke bench-smoke bench-wake bench ci
+.PHONY: verify lint sanitize-smoke explore-smoke bench-smoke servebench-smoke bench-wake bench ci
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,7 +13,8 @@ lint:
 sanitize-smoke:
 	REPRO_SANITIZE=1 REPRO_SANITIZE_REPORT=san-report.jsonl PYTHONPATH=src \
 	  $(PY) -m pytest -q tests/test_lifecycle.py tests/test_parking.py \
-	  tests/test_scheduler.py tests/test_tasksan.py tests/test_worksharing.py
+	  tests/test_scheduler.py tests/test_tasksan.py tests/test_worksharing.py \
+	  tests/test_serve_scaleout.py
 
 explore-smoke:
 	PYTHONPATH=src $(PY) tools/taskcheck.py --smoke --out taskcheck-out
@@ -23,10 +24,13 @@ bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --repeats 3 --json taskbench-wake.json
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --worksharing --smoke --json taskbench-worksharing.json
 
+servebench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/servebench.py --smoke --json servebench-smoke.json
+
 bench-wake:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --json taskbench-wake.json
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-ci: lint verify sanitize-smoke explore-smoke bench-smoke
+ci: lint verify sanitize-smoke explore-smoke bench-smoke servebench-smoke

@@ -1,0 +1,240 @@
+"""Sharded serve scale-out benchmark (the PR-9 serve battery).
+
+Drives :class:`repro.serve.ShardedServeEngine` over simulated engines
+(:class:`repro.serve.SimEngine`) whose prefill/decode are GIL-releasing
+sleeps — the runtime-side cost model of dispatched accelerator kernels —
+so shard scaling is measurable in one process even on a single core:
+N shards' decode "kernels" overlap in wall-clock exactly like N per-shard
+XLA dispatches would. Service times are deliberately slow (default 16 ms
+per decode iteration) so Python bookkeeping stays a small fraction of one
+core and the curve measures the architecture, not the interpreter.
+
+Three phases per shard count:
+
+* saturation — windowed closed-loop submission from thousands of simulated
+  users; reports aggregate throughput (the scale-out curve; the full run
+  must show >= 1.5x at 4 shards vs 1).
+* open-loop  — fixed arrival rate with Poisson-free deterministic spacing;
+  reports p50/p99 end-to-end latency per shard count.
+* burst      — arrivals at 2x the sustained capacity against BOUNDED
+  admission queues: the guard asserts every request terminates exactly
+  once (completed or rejected, zero lost, zero double-completed) within a
+  hard deadline — the never-livelock guarantee — with bounded p99 for the
+  completed ones (the burst degrades to queueing delay + shedding).
+
+    python benchmarks/servebench.py [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.serve import ShardedServeEngine
+
+# simulated service times: per-shard sustained capacity is
+# N_SLOTS / (MAX_NEW * DECODE_S) requests/s  (continuous batching: one
+# decode iteration advances every live slot)
+N_SLOTS = 8
+MAX_NEW = 4
+DECODE_S = 0.016
+PREFILL_S = 0.004
+N_USERS = 4096
+PROMPT = np.arange(8, dtype=np.int32)
+
+
+def shard_capacity_rps() -> float:
+    return N_SLOTS / (MAX_NEW * DECODE_S)
+
+
+def _pct(lat_ms: list, p: float) -> float:
+    if not lat_ms:
+        return 0.0
+    s = sorted(lat_ms)
+    return float(s[min(len(s) - 1, int(p * len(s)))])
+
+
+def _lat_ms(reqs) -> list:
+    return [(r.done_ns - r.submit_ns) / 1e6 for r in reqs
+            if not r.rejected and r.done_ns]
+
+
+def _await_all(router, reqs, deadline_s: float) -> bool:
+    """The never-livelock guard: every request must terminate (complete or
+    reject) within the deadline; a hung request fails the phase."""
+    deadline = time.monotonic() + deadline_s
+    for r in reqs:
+        left = deadline - time.monotonic()
+        if left <= 0 or not router.wait(r, timeout=left):
+            return False
+    return True
+
+
+def _accounting(router, reqs) -> dict:
+    snap = router.snapshot()
+    n_rej = sum(1 for r in reqs if r.rejected)
+    n_done = sum(1 for r in reqs if not r.rejected and r.done_event.is_set())
+    return {
+        "submitted": len(reqs),
+        "completed": n_done,
+        "rejected": n_rej,
+        "shed": snap["shed"],
+        "double_completed": snap["double_completed"],
+        "exact": n_done + n_rej == len(reqs)
+                 and snap["double_completed"] == 0,
+    }
+
+
+def _make_router(n_shards: int, queue_limit: int) -> ShardedServeEngine:
+    return ShardedServeEngine(
+        n_shards, n_workers=2, queue_limit=queue_limit, n_slots=N_SLOTS,
+        prefill_s=PREFILL_S, decode_s=DECODE_S).start()
+
+
+def run_saturation(n_shards: int, n_requests: int, *,
+                   window: int = 192) -> dict:
+    """Windowed closed-loop: keep ``window`` requests outstanding so every
+    shard's slots stay fed without tripping the admission bound."""
+    router = _make_router(n_shards, queue_limit=max(256, window))
+    try:
+        reqs = []
+        t0 = time.monotonic()
+        for i in range(n_requests):
+            reqs.append(router.submit(PROMPT, MAX_NEW,
+                                      key=f"user:{i % N_USERS}"))
+            if i >= window:
+                router.wait(reqs[i - window], timeout=60.0)
+        expect_s = n_requests / (shard_capacity_rps() * n_shards)
+        ok = _await_all(router, reqs, deadline_s=10 * expect_s + 30.0)
+        elapsed = time.monotonic() - t0
+        acct = _accounting(router, reqs)
+        return {
+            "n_shards": n_shards, "elapsed_s": round(elapsed, 3),
+            "rps": round(acct["completed"] / elapsed, 1),
+            "tok_s": round(acct["completed"] * (1 + MAX_NEW) / elapsed, 1),
+            "all_terminated": ok, **acct,
+        }
+    finally:
+        router.stop(drain=False)
+        router.shutdown()
+
+
+def run_open_loop(n_shards: int, rate_rps: float, duration_s: float,
+                  *, queue_limit: int = 64) -> dict:
+    """Deterministic open-loop arrivals at ``rate_rps`` for
+    ``duration_s``; reports end-to-end latency percentiles."""
+    router = _make_router(n_shards, queue_limit=queue_limit)
+    try:
+        reqs = []
+        t0 = time.monotonic()
+        next_t = t0
+        i = 0
+        while time.monotonic() - t0 < duration_s:
+            reqs.append(router.submit(PROMPT, MAX_NEW,
+                                      key=f"user:{i % N_USERS}"))
+            i += 1
+            next_t += 1.0 / rate_rps
+            pause = next_t - time.monotonic()
+            if pause > 0:
+                time.sleep(pause)
+        ok = _await_all(router, reqs, deadline_s=duration_s * 4 + 30.0)
+        acct = _accounting(router, reqs)
+        lat = _lat_ms(reqs)
+        return {
+            "n_shards": n_shards, "rate_rps": rate_rps,
+            "p50_ms": round(_pct(lat, 0.50), 2),
+            "p99_ms": round(_pct(lat, 0.99), 2),
+            "all_terminated": ok, **acct,
+        }
+    finally:
+        router.stop(drain=False)
+        router.shutdown()
+
+
+def run_burst(n_shards: int, duration_s: float, *, factor: float = 2.0,
+              queue_limit: int = 48, p99_bound_ms: float = 5000.0) -> dict:
+    """Arrivals at ``factor``x the sustained capacity against bounded
+    queues. Guards: exact accounting, hard termination deadline, bounded
+    p99 for the completed share."""
+    rate = factor * shard_capacity_rps() * n_shards
+    out = run_open_loop(n_shards, rate, duration_s, queue_limit=queue_limit)
+    out["factor"] = factor
+    out["p99_bounded"] = bool(out["p99_ms"] < p99_bound_ms)
+    out["ok"] = bool(out["exact"] and out["all_terminated"]
+                     and out["p99_bounded"])
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: small sizes; enforces the accounting + "
+                         "never-livelock guards (not the speedup bar)")
+    ap.add_argument("--shards", default=None,
+                    help="comma-separated shard counts (default 1,2,4)")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+
+    if args.shards:
+        shard_counts = [int(s) for s in args.shards.split(",")]
+    else:
+        shard_counts = [1, 2] if args.smoke else [1, 2, 4]
+    n_requests = 96 if args.smoke else 480
+    ol_dur = 1.0 if args.smoke else 3.0
+    ol_rate = 1.2 * shard_capacity_rps()  # overloads 1 shard, not 2+
+    burst_dur = 0.6 if args.smoke else 1.5
+
+    cap = shard_capacity_rps()
+    print(f"servebench: slots={N_SLOTS} max_new={MAX_NEW} "
+          f"decode={DECODE_S * 1e3:.0f}ms -> {cap:.0f} req/s/shard "
+          f"({'smoke' if args.smoke else 'full'})")
+    sweep = []
+    ok = True
+    for n in shard_counts:
+        sat = run_saturation(n, n_requests)
+        ol = run_open_loop(n, ol_rate, ol_dur)
+        row = {"n_shards": n, "saturation": sat, "open_loop": ol}
+        sweep.append(row)
+        ok = ok and sat["exact"] and sat["all_terminated"] \
+            and ol["exact"] and ol["all_terminated"]
+        print(f"  shards={n}  throughput={sat['rps']:7.1f} req/s "
+              f"({sat['tok_s']:8.1f} tok/s)   open-loop p50={ol['p50_ms']:7.1f}ms "
+              f"p99={ol['p99_ms']:7.1f}ms  rej={ol['rejected']}")
+
+    burst_shards = 2 if len(shard_counts) < 3 else shard_counts[-1] // 2
+    burst = run_burst(max(1, burst_shards), burst_dur)
+    ok = ok and burst["ok"]
+    print(f"  burst x{burst['factor']:.0f} @ {burst['n_shards']} shards: "
+          f"{burst['completed']}/{burst['submitted']} completed, "
+          f"{burst['rejected']} rejected, p99={burst['p99_ms']:.1f}ms, "
+          f"double={burst['double_completed']}  "
+          f"{'ok' if burst['ok'] else 'FAIL'}")
+
+    thr = {r["n_shards"]: r["saturation"]["rps"] for r in sweep}
+    speedup = None
+    if 1 in thr and 4 in thr and thr[1] > 0:
+        speedup = round(thr[4] / thr[1], 2)
+        print(f"  speedup 4 shards vs 1: {speedup}x (bar: 1.5x)")
+        if not args.smoke and speedup < 1.5:
+            ok = False
+
+    result = {"config": {"n_slots": N_SLOTS, "max_new": MAX_NEW,
+                         "decode_s": DECODE_S, "prefill_s": PREFILL_S,
+                         "capacity_rps_per_shard": cap,
+                         "smoke": args.smoke},
+              "sweep": sweep, "burst": burst,
+              "speedup_4v1": speedup, "ok": ok}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.json}")
+    if not ok:
+        print("servebench: GUARD FAILURE", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from repro.analyze.deadlock import DEADLOCK_CYCLE, LIVELOCK, WAIT_SPSC
 from repro.analyze.explore import checkpoint, current_name
-from repro.analyze.tsan import LOST_WAKE, WS_LOST_CHUNK
+from repro.analyze.tsan import LOST_WAKE, RACE_RW, WS_LOST_CHUNK
 from repro.core.locks import TicketLock
 from repro.core.parking import ParkingLot
 from repro.core.runtime import TaskRuntime, current_task
@@ -211,6 +211,72 @@ def _clean_ws(scheduler, deps):
     return scenario
 
 
+def clean_serve_sim(exp):
+    """Simulated continuous-batching serve engine under exploration: the
+    admit/prefill/decode task graph, session touches, drain and stop must
+    be finding-free on every interleaving. (serve imports stay local: the
+    serve package pulls in the jax-backed partitioning module.)"""
+    import numpy as np
+
+    from repro.serve.shard import SimEngine
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        eng = SimEngine(rt, n_slots=2).start()
+        reqs = [eng.submit(np.array([i + 1, i + 2], np.int32), 2,
+                           key=f"k{i % 2}") for i in range(3)]
+        for r in reqs:
+            assert eng.wait(r, timeout=10)
+        assert eng.stop(drain=True)
+        for r in reqs:
+            assert len(r.tokens) == 3, r.tokens
+    finally:
+        rt.shutdown()
+
+
+def clean_serve_sharded(exp):
+    """2-shard router with a full hash-slot migration under exploration:
+    park/seal/drain/export/install/commit on serialized schedules, then
+    routed service on the new owner."""
+    import numpy as np
+
+    from repro.dist.partitioning import affinity_hash
+    from repro.serve.router import ShardedServeEngine
+    router = ShardedServeEngine(2, n_workers=1, queue_limit=8, n_slots=2,
+                                explore=exp).start()
+    try:
+        key = "mig"
+        h = affinity_hash(key, router.n_hslots)
+        r1 = router.submit(np.array([1, 2, 3], np.int32), 1, key=key)
+        assert router.wait(r1, timeout=10)
+        mig = router.migrate(h, 1 - router.table[h], wait=True)
+        assert mig is not None and mig.committed, mig and mig.errors
+        r2 = router.submit(np.array([1, 2, 3], np.int32), 1, key=key)
+        assert router.wait(r2, timeout=10)
+        assert r2.shard_id == router.table[h]
+        router.stop(drain=True)
+    finally:
+        router.shutdown()
+
+
+def clean_data_pipeline(exp):
+    """Prefetching data pipeline: producer tasks write ("batch", i), the
+    consumer taskwaits — the dependency hand-off explored end to end."""
+    from repro.data.pipeline import DataPipeline, TokenSource
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        pipe = DataPipeline(rt, TokenSource(vocab_size=97, seed=3),
+                            batch_size=2, seq_len=4, prefetch=2).start()
+        ref = TokenSource(vocab_size=97, seed=3)
+        for step in range(3):
+            got = pipe.get(step, timeout=10)["tokens"]
+            assert (got == ref.batch(step, 2, 4)).all(), step
+        rt.barrier()
+    finally:
+        rt.shutdown()
+
+
 # ----------------------------------------------------------- seeded bugs
 def bug_abba(exp):
     """ABBA lock inversion: t1 takes A then B, t2 takes B then A. A
@@ -386,6 +452,46 @@ def bug_convoy(exp):
         rt.shutdown(wait=False)
 
 
+def bug_serve_migration_race(exp):
+    """DELIBERATE BUG: a migration that skips the seal->drain handshake.
+    The rogue migration task copies a KV slot (a manual, lock-free access
+    to ("slot", 0)) while a decode task that declared READ on the same
+    slot is still mid-body — exactly what the serve router's park/seal/
+    drain protocol exists to prevent. tasksan runs in report mode
+    alongside the explorer (the bug_ws_lost_chunk bridge pattern) and
+    must flag the undeclared write against the live reader."""
+    import threading
+
+    rt = TaskRuntime(n_workers=2, explore=exp, sanitize="report")
+    rt.start()
+    try:
+        in_body = threading.Event()
+        done = threading.Event()
+
+        def decode():
+            in_body.set()
+            # hold the slot read open (explorer-aware; a native wait would
+            # stall the serialized schedule)
+            exp.wait_until(done.is_set, kind="serve-wait",
+                           label="decode-hold", timed=True)
+
+        rt.spawn(decode, reads=[("slot", 0)], name="decode")
+        exp.wait_until(in_body.is_set, kind="serve-wait",
+                       label="migrate-entry", timed=True)
+        # the rogue migration: exports the slot with no seal, no drain
+        rt.san.on_manual_access(("slot", 0))
+        done.set()
+        rt.barrier(timeout=10)
+    finally:
+        try:
+            rt.shutdown(wait=False)
+        finally:
+            for f in rt.san.findings:
+                if f.kind == RACE_RW:
+                    exp._add_finding(f.to_dict())
+                    break
+
+
 # --------------------------------------------------------------- registry
 CLEAN = {
     "spawn-barrier": clean_spawn_barrier,
@@ -397,6 +503,9 @@ CLEAN = {
     "eventcount-parking": clean_eventcount_parking,
     "work-stealing": clean_work_stealing,
     "group-cancel": clean_group_cancel,
+    "serve-sim": clean_serve_sim,
+    "serve-sharded": clean_serve_sharded,
+    "data-pipeline": clean_data_pipeline,
 }
 for _sched in ("delegation", "global-lock", "work-stealing"):
     for _deps in ("waitfree", "locked"):
@@ -435,5 +544,10 @@ SEEDED = {
         "scenario": bug_ws_lost_chunk,
         "expect": {WS_LOST_CHUNK},
         "explore": {"schedules": 40, "seed": 0, "bound": 2},
+    },
+    "serve-migration-race": {
+        "scenario": bug_serve_migration_race,
+        "expect": {RACE_RW},
+        "explore": {"schedules": 30, "seed": 0, "bound": 2},
     },
 }

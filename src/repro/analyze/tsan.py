@@ -68,7 +68,8 @@ import threading
 from typing import Optional
 
 from repro.core.asm import (CHILD_DONE, COMMUTATIVE, READ, READ_SAT,
-                            REDUCTION, RED_SAT, WRITE_SAT, domain_key)
+                            READWRITE, REDUCTION, RED_SAT, WRITE_SAT,
+                            domain_key)
 from repro.analyze.deadlock import LockOrderGraph
 
 # message bits that constitute a happens-before edge sender -> receiver
@@ -151,13 +152,43 @@ class _Ctx:
     """Per-thread ambient context: pseudo-node clock + current task +
     held-lock stack for the lock-order graph."""
 
-    __slots__ = ("id", "clock", "current", "held")
+    __slots__ = ("id", "clock", "current", "held", "ext")
 
     def __init__(self, nid: int):
         self.id = nid
         self.clock = {nid: 1}
         self.current: Optional[_Node] = None
         self.held: list = []
+        self.ext: Optional["_ExtNode"] = None  # lazy, see on_manual_access
+
+
+class _ExtNode:
+    """Pseudo-node for manual accesses made by a non-task thread (a serve
+    client, a migration driver). It *shares* the thread's ambient clock
+    dict, so sync-channel acquires on that thread order its accesses."""
+
+    __slots__ = ("id", "clock", "parent")
+
+    def __init__(self, ctx: _Ctx):
+        self.id = ctx.id
+        self.clock = ctx.clock
+        self.parent = None
+
+    @property
+    def label(self) -> str:
+        return f"thread#{self.id}"
+
+
+class _ManualAcc:
+    """DataAccess stand-in for on_manual_access (address/atype/red_op is
+    all _check_access_start reads)."""
+
+    __slots__ = ("address", "atype", "red_op")
+
+    def __init__(self, address, atype, red_op=None):
+        self.address = address
+        self.atype = atype
+        self.red_op = red_op
 
 
 class _Shadow:
@@ -217,11 +248,18 @@ class TaskSanitizer:
         # worksharing chunk-claim journal: node -> list of claimed indices
         # (checked for exactly-once coverage when the descriptor finalizes)
         self._ws_claims: dict = {}
-        # lost-wake detector state
-        self._armed_lost_wake = False
+        # lost-wake detector state; armed holds the *runtime* whose enqueue
+        # woke nobody (or True when the caller didn't say) so that with
+        # several runtimes sharing one sanitizer (RuntimeCluster) a park
+        # timeout in runtime B can't claim runtime A's enqueue
+        self._armed_lost_wake: object = False
         self._lost_wake_reported = False
         # wake-epoch clock transfer (producer -> woken worker ambient)
         self._wake_clocks: dict = {}     # wid -> clock snapshot
+        # named sync channels: release/acquire clock transfer for ordering
+        # established OUTSIDE the dependency system (an engine-side
+        # threading.Lock, a drained-queue handoff) — see on_sync_release
+        self._sync_channels: dict = {}   # token -> clock
 
     # ------------------------------------------------------------ install
     def install(self, runtime) -> None:
@@ -493,6 +531,7 @@ class TaskSanitizer:
             self._shadow.clear()
             self._active.clear()
             self._release_clocks.clear()
+            self._sync_channels.clear()
 
     # ------------------------------------------------------------ worksharing
     # A worksharing descriptor is ONE logical task executed by several
@@ -590,14 +629,14 @@ class TaskSanitizer:
 
     # ------------------------------------------------------------ parking
     def on_enqueue_outcome(self, woken: bool, n_idle: int,
-                           pending: int) -> None:
+                           pending: int, origin=None) -> None:
         with self._lock:
             if woken:
                 self._armed_lost_wake = False
             elif n_idle > 0:
                 # a task was made visible, workers are idle, and nobody was
                 # woken — benign only if one of the racing pollers takes it
-                self._armed_lost_wake = True
+                self._armed_lost_wake = origin if origin is not None else True
 
     def on_wake_posted(self, wid) -> None:
         ctx = self._ctx()
@@ -613,11 +652,17 @@ class TaskSanitizer:
         with self._lock:
             _join(ctx.clock, wc)
 
-    def on_park_timeout(self, wid: int, pending: int) -> None:
+    def on_park_timeout(self, wid: int, pending: int, origin=None) -> None:
         if pending <= 0 or not self._armed_lost_wake:
             return
         with self._lock:
             if not self._armed_lost_wake or self._lost_wake_reported:
+                return
+            armed = self._armed_lost_wake
+            if origin is not None and armed is not True and armed is not origin:
+                # the armed enqueue belongs to a different runtime sharing
+                # this sanitizer; this runtime's pending backlog can't be
+                # the wake that one dropped
                 return
             self._lost_wake_reported = True
             self._finding(
@@ -627,6 +672,75 @@ class TaskSanitizer:
                 "were idle — a wakeup was lost (the futex publish/re-poll "
                 "protocol forbids this)",
                 worker=wid, pending=pending)
+
+    # ------------------------------------------------ manual accesses / sync
+    # The dependency system orders every *declared* access by construction
+    # (ASM satisfaction messages and release clocks carry the clocks), so a
+    # missing-edge race can only involve state touched OUTSIDE it. The serve
+    # router/migration path does exactly that: per-hash-slot session state
+    # is guarded by an engine-side threading.Lock and handed between shards
+    # by a seal -> drain -> export protocol, none of which the dependency
+    # system sees. These hooks teach tsan that ordering: on_manual_access
+    # race-checks one undeclared access, and on_sync_release/on_sync_acquire
+    # transfer clocks through a named channel (the vector-clock treatment of
+    # a lock release->acquire or a drained-queue handoff). Without the
+    # channel edges, two lock-serialized accesses look concurrent and
+    # report a spurious race — tests/test_tasksan.py pins that shape.
+    def on_manual_access(self, address, mode: str = "rw") -> None:
+        """Race-check an access made outside the dependency system.
+
+        ``mode`` is "r" for a read, anything else for a write. Unlike a
+        declared access (which spans its task body), a manual access is
+        instantaneous: checked against the active set and shadow state at
+        the call, then recorded in the shadow at the caller's next tick —
+        so a sync-channel release *after* this call publishes a clock that
+        covers it."""
+        atype = READ if mode == "r" else READWRITE
+        ctx = self._ctx()
+        with self._lock:
+            node = ctx.current
+            if node is None:
+                node = ctx.ext
+                if node is None:
+                    node = ctx.ext = _ExtNode(ctx)
+            acc = _ManualAcc(address, atype)
+            self._check_access_start(node, acc)
+            node.clock[node.id] = node.clock.get(node.id, 0) + 1
+            tick = node.clock[node.id]
+            sh = self._shadow.get(address)
+            if sh is None:
+                sh = self._shadow[address] = _Shadow()
+            if atype == READ:
+                sh.readers[node] = tick
+            else:
+                sh.write = (node, tick)
+                sh.readers.clear()
+                sh.reds.clear()
+
+    def on_sync_release(self, token) -> None:
+        """Publish the caller's clock into channel ``token`` (lock release /
+        handoff send). The caller's own component then ticks, so its LATER
+        accesses are not covered by this publish."""
+        ctx = self._ctx()
+        with self._lock:
+            node = ctx.current
+            clock = node.clock if node is not None else ctx.clock
+            nid = node.id if node is not None else ctx.id
+            ch = self._sync_channels.setdefault(token, {})
+            _join(ch, clock)
+            clock[nid] = clock.get(nid, 0) + 1
+
+    def on_sync_acquire(self, token) -> None:
+        """Join channel ``token``'s clock into the caller (lock acquire /
+        handoff receive): everything published before the matching
+        on_sync_release happens-before the caller's next access."""
+        ctx = self._ctx()
+        with self._lock:
+            ch = self._sync_channels.get(token)
+            if not ch:
+                return
+            dst = ctx.current.clock if ctx.current is not None else ctx.clock
+            _join(dst, ch)
 
     # ------------------------------------------------------------ locks
     def watch_lock(self, lock, name: Optional[str] = None) -> None:

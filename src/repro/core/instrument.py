@@ -55,6 +55,18 @@ EVENTS = {
     "ws.claim": 30,         # worksharing chunk claimed (arg: chunk index)
     "ws.finalize": 31,      # worksharing descriptor finalized by the last
                             # participant out (arg: task id)
+    "serve.submit": 32,     # request handed to the router (arg: shard id)
+    "serve.admit": 33,      # request accepted into a shard queue (arg: shard)
+    "serve.shed": 34,       # affinity shard full, redirected (arg: shard)
+    "serve.reject": 35,     # every shard full, request refused (arg: shard)
+    "serve.depth": 36,      # admission-queue depth sample (arg: depth);
+                            # emitted from the owning shard's threads, so
+                            # per-worker streams separate shards
+    "serve.complete": 37,   # request finished (arg: latency in µs)
+    "serve.migrate.begin": 38,   # hash-slot migration started (arg: hslot)
+    "serve.migrate.commit": 39,  # routing table flipped to dst (arg: hslot)
+    "serve.migrate.abort": 40,   # migration cancelled/failed; src retained
+                                 # ownership (arg: hslot)
 }
 
 

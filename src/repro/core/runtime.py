@@ -365,8 +365,13 @@ class TaskRuntime:
                  tracer: Optional[Tracer] = None,
                  spsc_capacity: int = 256, parking: str = "slots",
                  sanitize: Union[bool, str, None] = None,
-                 explore=None):
+                 explore=None, name: str = ""):
         self.n_workers = n_workers
+        # name distinguishes runtimes sharing one process (RuntimeCluster):
+        # it prefixes worker thread names and, critically, the schedule
+        # explorer's thread ids — two anonymous runtimes would both register
+        # workers as "w0" and the second would shadow the first's wait state
+        self.name = name
         self.tracer = tracer or Tracer(enabled=False)
         self.pool = TaskPool(enabled=use_pool)
         if deps == "waitfree":
@@ -419,16 +424,24 @@ class TaskRuntime:
         # tasksan (repro.analyze.tsan): sanitize=True raises TaskSanError at
         # shutdown, "report" only collects; None defers to REPRO_SANITIZE
         # ("1" -> True, "report" -> report mode). Off (None on every hook
-        # site) costs one attribute check per hook.
+        # site) costs one attribute check per hook. Passing an existing
+        # TaskSanitizer instance shares it across runtimes (RuntimeCluster)
+        # so cross-runtime handoffs are checked in one clock domain; the
+        # owner of a shared instance flushes/checks it, not shutdown().
         if sanitize is None:
             env = os.environ.get("REPRO_SANITIZE", "")
             sanitize = "report" if env == "report" \
                 else env not in ("", "0", "false")
         self.san = None
+        self._san_owned = True
         if sanitize:
             from repro.analyze.tsan import TaskSanitizer
-            self.san = TaskSanitizer(
-                raise_on_shutdown=(sanitize != "report"))
+            if isinstance(sanitize, TaskSanitizer):
+                self.san = sanitize
+                self._san_owned = False
+            else:
+                self.san = TaskSanitizer(
+                    raise_on_shutdown=(sanitize != "report"))
             self.san.install(self)
         # taskcheck (repro.analyze.explore): explore=<ScheduleExplorer|
         # SchedulePolicy|True> serializes every runtime thread behind the
@@ -475,14 +488,21 @@ class TaskRuntime:
             # the caller becomes "main" in the serialized world; it takes
             # the token first, so workers block until it yields
             exp.register("main")
+        prefix = f"repro-{self.name}-worker" if self.name else "repro-worker"
         for wid in range(self.n_workers):
             t = threading.Thread(target=self._worker, args=(wid,),
-                                 name=f"repro-worker-{wid}", daemon=True)
+                                 name=f"{prefix}-{wid}", daemon=True)
             t.start()
             self._threads.append(t)
         if exp is not None:
-            exp.await_threads([f"w{w}" for w in range(self.n_workers)])
+            exp.await_threads([self._worker_id(w)
+                               for w in range(self.n_workers)])
         return self
+
+    def _worker_id(self, wid: int) -> str:
+        """Explorer thread id for worker ``wid`` (name-prefixed so runtimes
+        sharing one explorer don't shadow each other's registrations)."""
+        return f"{self.name}:w{wid}" if self.name else f"w{wid}"
 
     def shutdown(self, wait: bool = True):
         if wait:
@@ -501,13 +521,13 @@ class TaskRuntime:
         if self._quiescent.is_set():
             self.collect()
         san = self.san
-        if san is not None:
+        if san is not None and self._san_owned:
             san.flush_report()  # CI artifact (REPRO_SANITIZE_REPORT)
         with self._errors_lock:
             errs, self._errors = self._errors, []
         if errs:
             raise _attach_siblings(errs)
-        if san is not None and san.raise_on_shutdown:
+        if san is not None and self._san_owned and san.raise_on_shutdown:
             san.check()
 
     def collect(self) -> int:
@@ -733,7 +753,7 @@ class TaskRuntime:
         san = self.san
         if san is not None:
             san.on_enqueue_outcome(woken > 0, self._parking.n_idle,
-                                   self.scheduler.pending())
+                                   self.scheduler.pending(), origin=self)
 
     # ---------------------------------------------------------------- work
     def _drop_token(self, task: Task):
@@ -943,14 +963,14 @@ class TaskRuntime:
         san = self.san
         if san is not None:
             san.on_enqueue_outcome(woken, self._parking.n_idle,
-                                   self.scheduler.pending())
+                                   self.scheduler.pending(), origin=self)
 
     def _worker(self, wid: int):
         _current_task.wid = wid
         parking = self._parking
         exp = self._explorer
         if exp is not None:
-            exp.register(f"w{wid}")
+            exp.register(self._worker_id(wid))
         spins = 0
         n_timeouts = 0
         just_woken = False
@@ -1016,7 +1036,8 @@ class TaskRuntime:
                 n_timeouts += 1
                 spins = _PARK_AFTER_SPINS  # timed out: skip the spin phase
                 if san is not None:
-                    san.on_park_timeout(wid, self.scheduler.pending())
+                    san.on_park_timeout(wid, self.scheduler.pending(),
+                                        origin=self)
         if exp is not None:
             exp.thread_exit()
 
@@ -1095,3 +1116,130 @@ class TaskRuntime:
                 "wakes": self._parking.wakes.load(),
                 "spurious_wakes": self._parking.spurious.load(),
                 "mailboxes": self._mb_pool.stats}
+
+
+class RuntimeCluster:
+    """N independent TaskRuntimes coordinated as one unit.
+
+    This is the in-process scale-out primitive behind the sharded serve
+    path (repro.serve.router): each member runs its own workers, scheduler
+    and dependency space — no cross-runtime address aliasing, callers
+    namespace shared logical addresses themselves — while the cluster
+    provides what must be common:
+
+    * one Tracer, so per-shard events land in one event stream;
+    * one TaskSanitizer (when sanitizing), so handoffs *between* runtimes
+      (e.g. session migration) are checked in a single clock domain;
+    * one ScheduleExplorer (when exploring), with members named
+      ``{name}{i}`` so their worker registrations don't collide;
+    * aggregated shutdown: every member is shut down even if an earlier
+      one raises, errors combine into one exception, and a shared
+      sanitizer is flushed/checked exactly once, at the end.
+
+    ``task_group()`` returns a TaskGroup bound to member 0 that any
+    member's spawn() may target — groups only need a home runtime for
+    cancel bookkeeping, membership is cross-runtime (the migration tasks
+    in repro.serve.router rely on this).
+    """
+
+    def __init__(self, n_runtimes: int, *, n_workers: int = 2,
+                 tracer: Optional[Tracer] = None,
+                 sanitize: Union[bool, str, None] = None,
+                 explore=None, name: str = "rt", **runtime_kwargs):
+        if n_runtimes < 1:
+            raise ValueError("n_runtimes must be >= 1")
+        self.name = name
+        self.tracer = tracer or Tracer(enabled=False)
+        if sanitize is None:
+            env = os.environ.get("REPRO_SANITIZE", "")
+            sanitize = "report" if env == "report" \
+                else env not in ("", "0", "false")
+        self.san = None
+        if sanitize:
+            from repro.analyze.tsan import TaskSanitizer
+            if isinstance(sanitize, TaskSanitizer):
+                self.san = sanitize
+            else:
+                self.san = TaskSanitizer(
+                    raise_on_shutdown=(sanitize != "report"))
+        if explore is not None and explore is not False:
+            # normalize to ONE explorer instance before fan-out — passing
+            # explore=True through would give each member a private explorer
+            from repro.analyze.explore import (ScheduleExplorer,
+                                               SchedulePolicy)
+            if isinstance(explore, SchedulePolicy):
+                explore = ScheduleExplorer(explore)
+            elif not isinstance(explore, ScheduleExplorer):
+                explore = ScheduleExplorer()
+        self.runtimes: list[TaskRuntime] = [
+            TaskRuntime(n_workers=n_workers, tracer=self.tracer,
+                        sanitize=self.san if self.san is not None else False,
+                        explore=explore, name=f"{name}{i}", **runtime_kwargs)
+            for i in range(n_runtimes)]
+        self._started = False
+
+    def __len__(self) -> int:
+        return len(self.runtimes)
+
+    def __getitem__(self, i: int) -> TaskRuntime:
+        return self.runtimes[i]
+
+    def start(self) -> "RuntimeCluster":
+        if self._started:
+            return self
+        self._started = True
+        for rt in self.runtimes:
+            rt.start()
+        return self
+
+    def shutdown(self, wait: bool = True):
+        """Shut down every member; raise one combined exception at the end.
+
+        A member failing to shut down must not strand the others' worker
+        threads, so each member is attempted regardless; task errors from
+        all members attach as siblings of the first. The shared sanitizer
+        runs its end-of-run check once, after every member stopped."""
+        errs: list[BaseException] = []
+        for rt in self.runtimes:
+            try:
+                rt.shutdown(wait=wait)
+            except BaseException as e:  # noqa: BLE001 - aggregated below
+                errs.append(e)
+        self._started = False
+        san = self.san
+        if san is not None:
+            san.flush_report()
+        if errs:
+            raise _attach_siblings(errs)
+        if san is not None and san.raise_on_shutdown:
+            san.check()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.shutdown(wait=exc[0] is None)
+
+    def barrier(self, timeout: Optional[float] = None) -> bool:
+        """Quiescence across every member runtime."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for rt in self.runtimes:
+            left = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            if not rt.barrier(timeout=left):
+                return False
+        return True
+
+    def collect(self) -> int:
+        return sum(rt.collect() for rt in self.runtimes)
+
+    def task_group(self, name: str = "",
+                   cancel_on_error: bool = False) -> TaskGroup:
+        return self.runtimes[0].task_group(name,
+                                           cancel_on_error=cancel_on_error)
+
+    def stats(self) -> dict:
+        per = [rt.stats() for rt in self.runtimes]
+        return {"runtimes": per,
+                "pending": sum(s["pending"] for s in per),
+                "live": sum(s["live"] for s in per)}

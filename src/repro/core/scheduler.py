@@ -37,9 +37,12 @@ class WorksharingBoard:
     The entry list is mutated with GIL-atomic list ops only; ``poll`` reads
     it racily and is purely advisory, because ``ws_join`` re-validates
     under the descriptor's own lock. A descriptor is served while it has
-    un-claimed chunks, and a *cancelled* one is still served until some
-    participant joins to run its finalize — otherwise a loop cancelled
-    before any worker saw it would never complete.
+    un-claimed chunks, and a *cancelled* one is still served while nobody
+    is in it to run its finalize — otherwise a loop cancelled before any
+    worker saw it would never complete. A cancelled loop with active
+    participants is NOT served (and ``ws_join`` refuses latecomers): it
+    drains on its own, and extra joiners would rotate through join/leave
+    keeping the participant count away from the zero that finalizes.
     """
 
     __slots__ = ("_entries",)

@@ -248,6 +248,12 @@ class WorksharingTask(Task):
         with self._ws_lock:
             if not self._ws_open:
                 return False
+            if self._ws_cancelled and self._ws_active:
+                # a cancelled loop needs exactly ONE participant to run the
+                # finalize, and someone is already in. Admitting more here
+                # livelocks: idle workers rotate through join/leave and
+                # _ws_active never reaches the zero ws_leave finalizes at.
+                return False
             self._ws_active += 1
             return True
 
@@ -299,10 +305,15 @@ class WorksharingTask(Task):
 
     def ws_needs_service(self) -> bool:
         """Board poll predicate (racy read — ``ws_join`` re-validates):
-        open with un-claimed chunks, or open-and-cancelled with nobody yet
-        joined to run the finalize."""
-        return self._ws_open and (
-            self._ws_cancelled or self._ws_cursor.load() < self.ws_nchunks)
+        open with un-claimed chunks, or open-and-cancelled with nobody
+        currently in to run the finalize (a cancelled loop with active
+        participants drains on its own; offering it keeps idle workers
+        spinning against the refusing join)."""
+        if not self._ws_open:
+            return False
+        if self._ws_cancelled:
+            return self._ws_active == 0
+        return self._ws_cursor.load() < self.ws_nchunks
 
     # ----------------------------------------------------------- lifecycle
     def run(self):

@@ -1,4 +1,5 @@
-"""Logical-axis -> mesh-axis partitioning rules (GSPMD-style).
+"""Logical-axis -> mesh-axis partitioning rules (GSPMD-style) and the
+serve-path slot partitioning.
 
 One table maps the model code's logical axis names (batch, seq, embed,
 heads, ...) to mesh axes; ``make_sharder`` instantiates a
@@ -6,6 +7,14 @@ heads, ...) to mesh axes; ``make_sharder`` instantiates a
 ``sanitize_pspec`` drops assignments that a given shape cannot honour
 (non-divisible dims, repeated mesh axes, axes absent from the mesh) so
 constraints never force GSPMD into padded relayouts.
+
+The second half is the runtime-instance analogue of the same idea: the
+sharded serve engine (repro.serve.router) partitions the KV-slot / request
+address space across N TaskRuntime shards. ``affinity_hash`` maps a request
+key to a stable virtual hash slot, ``build_slot_table`` spreads the virtual
+slots over shards (the indirection that makes migration a one-entry table
+flip), and ``partition_slots`` splits a physical slot range into balanced
+contiguous shares.
 """
 from __future__ import annotations
 
@@ -14,6 +23,54 @@ from typing import Optional
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import NULL_SHARDER, Sharder
+
+# FNV-1a (64-bit): endianness- and PYTHONHASHSEED-independent, so a key
+# routes to the same hash slot in every process of a deployment
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def affinity_hash(key, n_hslots: int = 64) -> int:
+    """Map a request key to a virtual hash slot in ``[0, n_hslots)``.
+
+    Stable across processes and runs (FNV-1a over the UTF-8 bytes of the
+    key; ints hash their decimal form) — prefix-cache affinity only works
+    if yesterday's key lands on the same shard tomorrow. Python's builtin
+    ``hash`` is salted per process, so it is exactly wrong here.
+    """
+    if n_hslots <= 0:
+        raise ValueError("n_hslots must be positive")
+    data = key if isinstance(key, bytes) else str(key).encode("utf-8")
+    h = _FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * _FNV_PRIME) & _MASK64
+    # xor-fold to spread entropy from the high bits into small moduli
+    return ((h >> 32) ^ h) % n_hslots
+
+
+def partition_slots(n_slots: int, n_shards: int) -> list[range]:
+    """Split ``range(n_slots)`` into ``n_shards`` contiguous shares whose
+    sizes differ by at most one (the first ``n_slots % n_shards`` shards
+    take the extra slot)."""
+    if n_shards <= 0:
+        raise ValueError("n_shards must be positive")
+    base, extra = divmod(n_slots, n_shards)
+    out, start = [], 0
+    for s in range(n_shards):
+        size = base + (1 if s < extra else 0)
+        out.append(range(start, start + size))
+        start += size
+    return out
+
+
+def build_slot_table(n_hslots: int, n_shards: int) -> list[int]:
+    """Initial hash-slot -> shard routing table (round-robin, so shard
+    loads stay balanced even when n_hslots % n_shards != 0). The router
+    owns the table afterwards; migration rewrites single entries."""
+    if n_shards <= 0:
+        raise ValueError("n_shards must be positive")
+    return [h % n_shards for h in range(n_hslots)]
 
 # logical axes sharded over the model-parallel mesh axis
 _MODEL_AXES = ("heads", "kv", "mlp", "moe_mlp", "inner", "ssm_heads",

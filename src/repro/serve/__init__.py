@@ -1,3 +1,8 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (AdmissionQueue, EngineCore, Request,
+                                ServeEngine)
+from repro.serve.router import Migration, ShardedServeEngine
+from repro.serve.shard import SimEngine, sim_engine_factory
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["AdmissionQueue", "EngineCore", "Request", "ServeEngine",
+           "Migration", "ShardedServeEngine", "SimEngine",
+           "sim_engine_factory"]

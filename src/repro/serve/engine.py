@@ -14,20 +14,37 @@ The decode loop is the paper's single-creator regime: the loop task spawns
 the next decode task; admits/prefills arrive concurrently from request
 threads, and the ASM dependency system interleaves slot claims with the
 batched decode without a global scheduler lock.
+
+Scale-out split (see docs/SERVING.md): :class:`EngineCore` is the
+model-agnostic half — admission queue, slot lifecycle, decode chain,
+per-hash-slot session state and the seal/drain hooks migration needs.
+:class:`ServeEngine` adds the jax model (prefill forward, batched decode,
+KV-cache splice) and is what a single-runtime deployment instantiates, with
+the exact pre-split behaviour. ``repro.serve.shard`` subclasses the core
+with a simulated backend whose decode *sleeps* (models device compute that
+releases the GIL, like a dispatched XLA kernel) so shard scaling is
+measurable in-process; ``repro.serve.router`` composes N cores into one
+sharded engine.
+
+When the engine runs with ``shard_id`` set, its dependency addresses are
+namespaced per shard — N engines sharing one process (RuntimeCluster) must
+not alias each other's ("slot", i) addresses in a shared sanitizer's shadow
+state. Session state is the one deliberate exception: it is keyed
+("sess", h) globally because ownership of a hash slot *moves* between
+shards; its cross-shard ordering comes from the sanitizer's sync channels
+(the engine-side lock + the seal->drain handoff), not from the dependency
+system.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models import api as mapi
 from repro.models.common import NULL_SHARDER
 
 
@@ -40,26 +57,90 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)
     done_event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # scale-out fields (see repro.serve.router)
+    key: Optional[str] = None       # affinity key (session / prefix-cache)
+    hslot: Optional[int] = None     # affinity_hash(key) when key is set
+    shard_id: Optional[int] = None  # shard that admitted the request
+    submit_ns: int = 0
+    done_ns: int = 0
+    rejected: bool = False
+    _done_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    def finish(self) -> bool:
+        """Set done_event exactly once; True only for the first caller —
+        the accounting primitive behind the zero-double-completion
+        guarantee (a second completion is a router/migration bug and is
+        counted, not silently absorbed)."""
+        with self._done_lock:
+            if self.done_event.is_set():
+                return False
+            self.done_event.set()
+            return True
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, runtime, *, n_slots: int = 4,
-                 max_seq: int = 256, sharder=NULL_SHARDER, greedy=True):
-        self.cfg = cfg
-        self.params = params
+class AdmissionQueue:
+    """Bounded admission FIFO. ``limit <= 0`` means unbounded (the legacy
+    single-engine mode); a sharded deployment always bounds it so a burst
+    becomes queueing delay on the shard and, past the bound, shedding at
+    the router — never an unbounded backlog.
+
+    ``lock`` is public: the engine runs compound check-and-move sequences
+    (admission guard + append, pop + admitted-table insert) under it so
+    that seal/drain accounting never observes a request in neither
+    structure."""
+
+    def __init__(self, limit: int = 0):
+        self.limit = limit
+        self.lock = threading.Lock()
+        self._q: collections.deque = collections.deque()
+
+    def try_append(self, req: Request, guard=None) -> bool:
+        """Append unless full or ``guard()`` (evaluated under the queue
+        lock) refuses; False means the caller must redirect/shed."""
+        with self.lock:
+            if guard is not None and not guard():
+                return False
+            if 0 < self.limit <= len(self._q):
+                return False
+            self._q.append(req)
+            return True
+
+    def drain(self) -> list:
+        with self.lock:
+            out = list(self._q)
+            self._q.clear()
+        return out
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+class EngineCore:
+    """Model-agnostic continuous-batching core (see module docstring).
+
+    Subclasses implement ``_prefill_exec(req, slot) -> first_token`` and
+    ``_decode_exec(live_slots) -> next_token_by_slot``."""
+
+    def __init__(self, runtime, *, n_slots: int = 4, max_seq: int = 256,
+                 shard_id: Optional[int] = None, queue_limit: int = 0):
         self.rt = runtime
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.sh = sharder
-        # batched caches: one cache tree with batch dim = n_slots
-        self.cache = mapi.init_cache(cfg, n_slots, max_seq)
+        self.shard_id = shard_id
         self.pos = np.zeros(n_slots, np.int32)        # next cache position
         self.budget = np.zeros(n_slots, np.int32)     # remaining new tokens
         self.active: list[Optional[Request]] = [None] * n_slots
         self._free = list(range(n_slots))
         self._free_lock = threading.Lock()
-        self._queue: list[Request] = []
-        self._qlock = threading.Lock()
+        self._queue = AdmissionQueue(limit=queue_limit)
         # admitted requests whose prefill has not completed yet (slot ->
         # Request): stop(drain=False) must release these waiters too — a
         # cancelled prefill never runs, so it never reaches self.active
@@ -78,37 +159,93 @@ class ServeEngine:
         # release every blocked client, not just the explicit-stop path
         self.group.on_cancel = self._release_waiters
         self._next_id = 0
-        self._decode_fn = jax.jit(self._decode_batch)
-        self.stats = {"prefills": 0, "decode_iters": 0, "tokens": 0}
+        self._id_lock = threading.Lock()
+        self.stats = {"prefills": 0, "decode_iters": 0, "tokens": 0,
+                      "completed": 0, "rejected": 0, "double_completed": 0}
+        # per-hash-slot session state (prefix-cache metadata), written by
+        # prefill bodies and moved wholesale by migration. Guarded by an
+        # engine-side lock the dependency system never sees — ordering is
+        # taught to tasksan through a sync channel (docs/SERVING.md)
+        self.sessions: dict[int, dict] = {}
+        self._sess_lock = threading.Lock()
+        # migration seal/drain handshake; _sealed is guarded by the
+        # admission queue's lock so the admission guard and seal() agree
+        self._sealed: set[int] = set()
+        self._drain_events: dict[int, threading.Event] = {}
+        # completion hook + latency ring for the router / servebench
+        self.on_complete: Optional[Callable[[Request], None]] = None
+        self.latencies_us: collections.deque = collections.deque(maxlen=4096)
 
-    # ---------------------------------------------------------- model ops
-    def _prefill_one(self, tokens: np.ndarray):
-        """Single-sequence prefill -> (first_token, cache_slices)."""
-        batch = {"tokens": jnp.asarray(tokens)[None, :]}
-        logits, _, cache = mapi.forward(self.cfg, self.params, batch, self.sh,
-                                        mode="prefill")
-        first = int(jnp.argmax(logits[0, -1]))
-        return first, cache
+    # ------------------------------------------------------------ addresses
+    # Dependency addresses are shard-namespaced: N engines in one process
+    # sharing a sanitizer/tracer must not alias each other's slots.
+    def _addr(self, name: str):
+        return name if self.shard_id is None else (name, self.shard_id)
 
-    def _decode_batch(self, cache, tokens, pos):
-        batch = {"tokens": tokens}
-        logits, _, new_cache = mapi.forward(
-            self.cfg, self.params, batch, self.sh, mode="decode",
-            cache=cache, cache_pos=pos)
-        return jnp.argmax(logits[:, -1, :], axis=-1), new_cache
+    def _slot_addr(self, i: int):
+        return ("slot", i) if self.shard_id is None \
+            else ("slot", self.shard_id, i)
+
+    def _decode_reads(self) -> list:
+        # the module contract: decode READS every slot — prefills RW their
+        # slot, so the dependency system serializes a slot's prefill against
+        # decode iterations instead of racing on the shared cache
+        return [self._addr("params")] + [self._slot_addr(i)
+                                         for i in range(self.n_slots)]
+
+    # ---------------------------------------------------------- model hooks
+    def _prefill_exec(self, req: Request, slot: int) -> int:
+        raise NotImplementedError
+
+    def _decode_exec(self, live: list) -> np.ndarray:
+        raise NotImplementedError
 
     # ---------------------------------------------------------- lifecycle
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               on_token=None) -> Request:
-        with self._qlock:
-            req = Request(np.asarray(prompt, np.int32), max_new_tokens,
-                          id=self._next_id, on_token=on_token)
+               on_token=None, *, key=None) -> Request:
+        with self._id_lock:
+            rid = self._next_id
             self._next_id += 1
-            if not self.group.cancelled:  # terminal engine never drains the
-                self._queue.append(req)   # queue again: don't grow it
-        if self.group.cancelled:
-            req.done_event.set()
+        req = Request(np.asarray(prompt, np.int32), max_new_tokens,
+                      id=rid, on_token=on_token, key=key)
+        if key is not None:
+            from repro.dist.partitioning import affinity_hash
+            req.hslot = affinity_hash(key)
+        req.submit_ns = time.monotonic_ns()
+        if not self.offer(req):
+            if not self.group.cancelled:
+                # bounded queue full / hash slot sealed: a standalone engine
+                # has nowhere to redirect, so the request sheds here
+                req.rejected = True
+                self.stats["rejected"] += 1
+                self.rt.tracer.event("serve.reject", self.shard_id or 0)
+            req.finish()
         return req
+
+    def offer(self, req: Request) -> bool:
+        """Admit one request into the queue. False when refused (engine
+        cancelled, queue at its bound, or the request's hash slot is sealed
+        for migration) — the router redirects or sheds on refusal."""
+        req.shard_id = self.shard_id
+
+        def _admissible() -> bool:
+            if self.group.cancelled:  # terminal engine never drains the
+                return False          # queue again: don't grow it
+            return req.hslot is None or req.hslot not in self._sealed
+
+        if not self._queue.try_append(req, guard=_admissible):
+            return False
+        tracer = self.rt.tracer
+        tracer.event("serve.admit", self.shard_id or 0)
+        tracer.event("serve.depth", self._queue.depth)
+        return True
+
+    @property
+    def load(self) -> int:
+        """Queue depth + occupied slots: the router's balance metric."""
+        with self._free_lock:
+            busy = self.n_slots - len(self._free)
+        return self._queue.depth + busy
 
     def _admit(self):
         """Move queued requests into free slots (spawns prefill tasks)."""
@@ -116,14 +253,18 @@ class ServeEngine:
             with self._free_lock:
                 if not self._free:
                     return
-            with self._qlock:
-                if not self._queue:
+            # pop + admitted-insert under the queue lock: drain accounting
+            # (_hslot_quiet) must never observe a request in neither place
+            with self._queue.lock:
+                if not self._queue._q:
                     return
-                req = self._queue.pop(0)
-            with self._free_lock:
-                slot = self._free.pop(0)
-            with self._admitted_lock:
-                self._admitted[slot] = req
+                with self._free_lock:
+                    if not self._free:
+                        return
+                    slot = self._free.pop(0)
+                req = self._queue._q.popleft()
+                with self._admitted_lock:
+                    self._admitted[slot] = req
             # detached: prefills are admitted from inside a decode task but
             # are not nested work of that iteration. The commutative "cache"
             # access makes concurrent prefills mutually exclusive (the
@@ -132,36 +273,24 @@ class ServeEngine:
             # prefills interleave and lose one slot's KV.
             t = self.group.spawn(self._prefill_task, (req, slot),
                                  name=f"prefill:{req.id}", detached=True,
-                                 rw=[("slot", slot)], reads=["params"],
-                                 commutative=["cache"])
+                                 rw=[self._slot_addr(slot)],
+                                 reads=[self._addr("params")],
+                                 commutative=[self._addr("cache")])
             if t is None:  # group cancelled concurrently: return the slot
                 with self._admitted_lock:
                     self._admitted.pop(slot, None)
                 with self._free_lock:
                     self._free.append(slot)
-                req.done_event.set()  # never admitted; unblock its waiter
+                req.finish()  # never admitted; unblock its waiter
                 return
 
     def _prefill_task(self, req: Request, slot: int):
-        L = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
-        first, cache = self._prefill_one(req.prompt[:L])
-        # splice the sequence cache into the batched slot
-        def splice(dst, src):
-            if dst is None:
-                return None
-            if dst.ndim >= 3 and src.shape[0] == dst.shape[0] and \
-                    dst.shape[1] == self.n_slots:
-                # (L, n_slots, T, ...) <- (L, 1, S, ...)
-                return jax.lax.dynamic_update_slice(
-                    dst, src.astype(dst.dtype),
-                    (0, slot) + (0,) * (dst.ndim - 2))
-            return dst
-        self.cache = jax.tree_util.tree_map(splice, self.cache, cache)
-        self.pos[slot] = L
+        first = self._prefill_exec(req, slot)
         self.budget[slot] = req.max_new_tokens
         req.tokens.append(first)
         if req.on_token:
             req.on_token(first)
+        self.touch_session(req)
         self.active[slot] = req
         with self._admitted_lock:  # visible in active BEFORE leaving here:
             self._admitted.pop(slot, None)  # stop() always sees one of them
@@ -170,50 +299,166 @@ class ServeEngine:
     def _decode_iter(self):
         live = [i for i, r in enumerate(self.active) if r is not None]
         if live:
-            toks = np.zeros((self.n_slots, 1), np.int32)
-            for i in live:
-                toks[i, 0] = self.active[i].tokens[-1]
-            # per-slot cache positions (continuous batching): idle slots
-            # write harmlessly into their own stale position
-            nxt, self.cache = self._decode_fn(self.cache,
-                                              jnp.asarray(toks),
-                                              jnp.asarray(self.pos))
-            nxt = np.asarray(nxt)
+            nxt = self._decode_exec(live)
             for i in live:
                 req = self.active[i]
-                req.tokens.append(int(nxt[i]))
+                tok = int(nxt[i])
+                req.tokens.append(tok)
                 self.stats["tokens"] += 1
                 if req.on_token:
-                    req.on_token(int(nxt[i]))
+                    req.on_token(tok)
                 self.pos[i] += 1
                 self.budget[i] -= 1
                 if self.budget[i] <= 0 or self.pos[i] >= self.max_seq - 1:
                     self.active[i] = None
-                    req.done_event.set()
                     with self._free_lock:
                         self._free.append(i)
+                    self._retire(req)
             self.stats["decode_iters"] += 1
         self._admit()
         if not self._stop:
-            delay = 0.0 if live else 0.002
-            if delay:
-                time.sleep(delay)
+            # idle backoff is a wall-clock pause: skipped under the
+            # schedule explorer, where it would stall the serialized world
+            if not live and self.rt._explorer is None:
+                time.sleep(0.002)
             # detached: the loop respawns itself — parenting iteration N+1
             # on N would chain completion tokens forever and pin every
             # decode Task in memory until stop()
             self.group.spawn(self._decode_iter, name="decode.loop",
-                             detached=True, rw=["decode"],
+                             detached=True, rw=[self._addr("decode")],
                              reads=self._decode_reads())
 
-    def _decode_reads(self) -> list:
-        # the module contract: decode READS every slot — prefills RW their
-        # slot, so the dependency system serializes a slot's prefill against
-        # decode iterations instead of racing on the shared self.cache
-        return ["params"] + [("slot", i) for i in range(self.n_slots)]
+    def _retire(self, req: Request):
+        req.done_ns = time.monotonic_ns()
+        if req.finish():
+            self.stats["completed"] += 1
+            if req.submit_ns:
+                lat_us = (req.done_ns - req.submit_ns) // 1000
+                self.latencies_us.append(lat_us)
+                self.rt.tracer.event("serve.complete", lat_us)
+            cb = self.on_complete
+            if cb is not None:
+                cb(req)
+        else:
+            self.stats["double_completed"] += 1
+        self._check_drain(req.hslot)
 
+    # ------------------------------------------------------------ sessions
+    @staticmethod
+    def _sess_chan(h: int):
+        """Sanitizer sync channel for hash slot ``h``'s session state.
+
+        Keyed per hash slot and GLOBAL — like the ("sess", h) address it
+        orders — because ownership of ``h`` moves between engines: the
+        last write an engine makes (including the drop at migration
+        commit, or the destination cleanup when an install fails) must be
+        visible to whichever engine touches ``h`` next, and a per-engine
+        channel can't carry clocks across that handoff."""
+        return ("serve.sess", h)
+
+    def touch_session(self, req: Request) -> int:
+        """Record the request against its hash-slot session (prefill body).
+        Returns the prior hit count (a prefix-cache hit indicator)."""
+        if req.key is None:
+            return 0
+        h = req.hslot
+        san = self.rt.san
+        with self._sess_lock:
+            if san is not None:
+                san.on_sync_acquire(self._sess_chan(h))
+                san.on_manual_access(("sess", h))
+            sess = self.sessions.setdefault(h, {})
+            ent = sess.setdefault(req.key, {"hits": 0, "prefix": 0})
+            hits = ent["hits"]
+            ent["hits"] += 1
+            ent["prefix"] = max(ent["prefix"], int(len(req.prompt)))
+            if san is not None:
+                san.on_sync_release(self._sess_chan(h))
+        return hits
+
+    def export_session(self, h: int) -> dict:
+        """Deep-copy hash slot ``h``'s session state (migration export).
+        The source keeps its copy until ``drop_session`` at commit, so an
+        aborted migration leaves the source authoritative."""
+        san = self.rt.san
+        with self._sess_lock:
+            if san is not None:
+                san.on_sync_acquire(self._sess_chan(h))
+                san.on_manual_access(("sess", h), "r")
+            state = {k: dict(v) for k, v in self.sessions.get(h, {}).items()}
+            if san is not None:
+                san.on_sync_release(self._sess_chan(h))
+        return state
+
+    def install_session(self, h: int, state: dict) -> None:
+        san = self.rt.san
+        with self._sess_lock:
+            if san is not None:
+                san.on_sync_acquire(self._sess_chan(h))
+                san.on_manual_access(("sess", h))
+            if state:
+                merged = self.sessions.setdefault(h, {})
+                for k, v in state.items():
+                    merged[k] = dict(v)
+            if san is not None:
+                san.on_sync_release(self._sess_chan(h))
+
+    def drop_session(self, h: int) -> None:
+        san = self.rt.san
+        with self._sess_lock:
+            if san is not None:
+                san.on_sync_acquire(self._sess_chan(h))
+                san.on_manual_access(("sess", h))
+            self.sessions.pop(h, None)
+            if san is not None:
+                san.on_sync_release(self._sess_chan(h))
+
+    # ------------------------------------------------------- seal / drain
+    def seal(self, h: int) -> threading.Event:
+        """Stop admitting requests for hash slot ``h`` (offers are refused;
+        the router parks them) and return an Event that sets once every
+        already-admitted request for ``h`` — queued, in prefill, or
+        decoding — has retired. Migration export waits on it: after it
+        fires, no task on this shard will touch ``h``'s session again."""
+        ev = self._drain_events.setdefault(h, threading.Event())
+        with self._queue.lock:
+            self._sealed.add(h)
+        self._check_drain(h)
+        return ev
+
+    def unseal(self, h: int) -> None:
+        with self._queue.lock:
+            self._sealed.discard(h)
+        self._drain_events.pop(h, None)
+
+    def _hslot_quiet(self, h: int) -> bool:
+        with self._queue.lock:
+            if any(r.hslot == h for r in self._queue._q):
+                return False
+        with self._admitted_lock:
+            if any(r.hslot == h for r in self._admitted.values()):
+                return False
+        return all(r is None or r.hslot != h for r in self.active)
+
+    def _check_drain(self, h: Optional[int]) -> None:
+        if h is None or h not in self._sealed:
+            return
+        ev = self._drain_events.get(h)
+        if ev is None or ev.is_set():
+            return
+        if self._hslot_quiet(h):
+            san = self.rt.san
+            if san is not None:
+                # the drained handoff: the last retiring task publishes,
+                # the migration export (on another thread, possibly another
+                # runtime) observes before touching ("sess", h)
+                san.on_sync_release(("serve.drain", self.shard_id, h))
+            ev.set()
+
+    # ------------------------------------------------------------ control
     def start(self):
         self.group.spawn(self._decode_iter, name="decode.loop",
-                         detached=True, rw=["decode"],
+                         detached=True, rw=[self._addr("decode")],
                          reads=self._decode_reads())
         return self
 
@@ -237,17 +482,97 @@ class ServeEngine:
 
     def _release_waiters(self):
         """Unblock every client of an unfinished request (group.on_cancel)."""
-        with self._qlock:
-            pending, self._queue = self._queue, []
-        for req in pending:
-            req.done_event.set()
+        for req in self._queue.drain():
+            req.finish()
         with self._admitted_lock:  # admitted, prefill dropped by the cancel
             admitted = list(self._admitted.values())
         for req in admitted:
-            req.done_event.set()
+            req.finish()
         for req in list(self.active):
             if req is not None:
-                req.done_event.set()
+                req.finish()
 
     def wait(self, req: Request, timeout: float = 120.0) -> bool:
+        exp = self.rt._explorer
+        if exp is not None:
+            st = exp.wait_until(req.done_event.is_set, kind="serve-wait",
+                                label=f"serve.wait:{req.id}", timed=True)
+            if st != "disabled":
+                return req.done_event.is_set()
         return req.done_event.wait(timeout)
+
+
+class ServeEngine(EngineCore):
+    """The jax-model engine: EngineCore + prefill forward, batched decode
+    and the KV-cache splice. Single-runtime deployments use this directly;
+    the sharded router drives one model engine (or simulated core) per
+    shard."""
+
+    def __init__(self, cfg, params, runtime, *, n_slots: int = 4,
+                 max_seq: int = 256, sharder=NULL_SHARDER, greedy=True,
+                 shard_id: Optional[int] = None, queue_limit: int = 0):
+        super().__init__(runtime, n_slots=n_slots, max_seq=max_seq,
+                         shard_id=shard_id, queue_limit=queue_limit)
+        import jax
+
+        from repro.models import api as mapi
+        self.cfg = cfg
+        self.params = params
+        self.sh = sharder
+        # batched caches: one cache tree with batch dim = n_slots
+        self.cache = mapi.init_cache(cfg, n_slots, max_seq)
+        self._decode_fn = jax.jit(self._decode_batch)
+
+    # ---------------------------------------------------------- model ops
+    def _prefill_one(self, tokens: np.ndarray):
+        """Single-sequence prefill -> (first_token, cache_slices)."""
+        import jax.numpy as jnp
+
+        from repro.models import api as mapi
+        batch = {"tokens": jnp.asarray(tokens)[None, :]}
+        logits, _, cache = mapi.forward(self.cfg, self.params, batch, self.sh,
+                                        mode="prefill")
+        first = int(jnp.argmax(logits[0, -1]))
+        return first, cache
+
+    def _decode_batch(self, cache, tokens, pos):
+        import jax.numpy as jnp
+
+        from repro.models import api as mapi
+        batch = {"tokens": tokens}
+        logits, _, new_cache = mapi.forward(
+            self.cfg, self.params, batch, self.sh, mode="decode",
+            cache=cache, cache_pos=pos)
+        return jnp.argmax(logits[:, -1, :], axis=-1), new_cache
+
+    # ---------------------------------------------------------- core hooks
+    def _prefill_exec(self, req: Request, slot: int) -> int:
+        import jax
+        L = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
+        first, cache = self._prefill_one(req.prompt[:L])
+
+        # splice the sequence cache into the batched slot
+        def splice(dst, src):
+            if dst is None:
+                return None
+            if dst.ndim >= 3 and src.shape[0] == dst.shape[0] and \
+                    dst.shape[1] == self.n_slots:
+                # (L, n_slots, T, ...) <- (L, 1, S, ...)
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype),
+                    (0, slot) + (0,) * (dst.ndim - 2))
+            return dst
+        self.cache = jax.tree_util.tree_map(splice, self.cache, cache)
+        self.pos[slot] = L
+        return first
+
+    def _decode_exec(self, live: list) -> np.ndarray:
+        import jax.numpy as jnp
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i in live:
+            toks[i, 0] = self.active[i].tokens[-1]
+        # per-slot cache positions (continuous batching): idle slots
+        # write harmlessly into their own stale position
+        nxt, self.cache = self._decode_fn(self.cache, jnp.asarray(toks),
+                                          jnp.asarray(self.pos))
+        return np.asarray(nxt)

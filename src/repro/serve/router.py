@@ -1,0 +1,393 @@
+"""Sharded serve scale-out: affinity routing, backpressure, migration.
+
+One :class:`ShardedServeEngine` composes N per-shard engines (one
+TaskRuntime each, coordinated by a :class:`~repro.core.runtime.
+RuntimeCluster`) behind a single submit() surface:
+
+Routing. A request's affinity key maps through ``affinity_hash`` to one of
+``n_hslots`` *virtual hash slots*; a table (``build_slot_table``) maps hash
+slots to shards. The indirection is what makes rebalancing cheap: moving a
+hash slot is a one-entry table flip, no rehashing of live state. Keyless
+requests hash their request id — same mechanism, uniform spread.
+
+Backpressure. Every shard bounds its admission queue. A burst first
+becomes queueing delay on the affinity shard; when that queue is full the
+router *sheds* the request to the least-loaded shard (dropping its
+affinity: a shed request must not write another shard's copy of the
+session address space — see docs/SERVING.md); when every queue is full the
+request is rejected with ``req.rejected = True`` and its done_event set.
+Every submitted request therefore terminates exactly once: completed,
+rejected, or released by stop(). Nothing blocks unboundedly and nothing
+is dropped silently — the burst degrades to queueing latency, not
+livelock.
+
+Migration. ``migrate(h, dst)`` moves hash slot ``h``'s session state
+between shards under a TaskGroup with ``cancel_on_error=True``:
+
+  1. park:   the router holds new arrivals for ``h`` in a bounded pending
+             list (overflow sheds);
+  2. seal:   the source engine refuses further offers for ``h`` and arms a
+             drained event that fires when every already-admitted request
+             for ``h`` retired;
+  3. export: a task on the source runtime waits for the drain, then
+             *copies* the session state (the source stays authoritative);
+  4. install+commit: a task on the destination runtime installs the copy,
+             flips the routing table entry, drops the source copy, unseals
+             and flushes the parked arrivals to the new owner.
+
+Cancel or error anywhere before commit -> ``Migration.wait`` runs the
+abort path: unseal, keep the table at the source, flush parked arrivals
+back to it. Either way exactly one shard owns ``h`` afterwards and the
+table points at an engine that has the state — a failed migration leaves
+both shards consistent.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.core.runtime import RuntimeCluster, TaskGroup
+from repro.dist.partitioning import affinity_hash, build_slot_table
+from repro.serve.engine import EngineCore, Request
+from repro.serve.shard import sim_engine_factory, wait_event
+
+_PENDING_LIMIT = 256  # parked-per-migrating-hslot bound; overflow sheds
+
+
+class Migration:
+    """Handle for one in-flight hash-slot migration."""
+
+    def __init__(self, router: "ShardedServeEngine", h: int, src_id: int,
+                 dst_id: int, group: TaskGroup):
+        self.router = router
+        self.h = h
+        self.src_id = src_id
+        self.dst_id = dst_id
+        self.group = group
+        self.committed = False
+        self.errors: tuple = ()
+        self._finished = threading.Event()
+
+    def cancel(self) -> None:
+        """Cancel the migration: queued export/install tasks are dropped at
+        dequeue; a task already mid-body finishes. Call wait() afterwards
+        to run the abort path and restore routing."""
+        self.group.cancel()
+
+    def wait(self, timeout: float = 30.0) -> bool:
+        """Wait for the migration tasks, then settle: on commit nothing to
+        do; otherwise abort (unseal source, flush parked arrivals back).
+        Returns True when the migration committed."""
+        self.group.wait(timeout=timeout, raise_errors=False)
+        self.router._settle_migration(self)
+        return self.committed
+
+
+class ShardedServeEngine:
+    def __init__(self, n_shards: int = 2, *, engine_factory=None,
+                 cluster: Optional[RuntimeCluster] = None,
+                 n_hslots: int = 64, n_workers: int = 2,
+                 queue_limit: int = 64, n_slots: int = 4, max_seq: int = 256,
+                 prefill_s: float = 0.0, decode_s: float = 0.0,
+                 tracer=None, sanitize=None, explore=None):
+        self.cluster = cluster if cluster is not None else RuntimeCluster(
+            n_shards, n_workers=n_workers, tracer=tracer, sanitize=sanitize,
+            explore=explore, name="serve")
+        self.n_shards = len(self.cluster)
+        self.n_hslots = n_hslots
+        self.table = build_slot_table(n_hslots, self.n_shards)
+        self._table_lock = threading.Lock()
+        if engine_factory is None:
+            engine_factory = sim_engine_factory(
+                n_slots=n_slots, max_seq=max_seq, queue_limit=queue_limit,
+                prefill_s=prefill_s, decode_s=decode_s)
+        self.shards: list[EngineCore] = [
+            engine_factory(i, self.cluster[i]) for i in range(self.n_shards)]
+        # arrivals parked while their hash slot migrates (h -> [Request])
+        self._pending: dict[int, list] = {}
+        self._migrations: dict[int, Migration] = {}
+        self._next_id = 0
+        self._id_lock = threading.Lock()
+        self.stats = {"submitted": 0, "shed": 0, "rejected": 0, "parked": 0,
+                      "migrations": 0, "commits": 0, "aborts": 0}
+        self._stats_lock = threading.Lock()
+
+    def _count(self, key: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self.stats[key] += n
+
+    @property
+    def tracer(self):
+        return self.cluster.tracer
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ShardedServeEngine":
+        self.cluster.start()
+        for eng in self.shards:
+            eng.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> bool:
+        """Stop every shard. drain=False cancels all shard groups mid-burst
+        (each engine releases its own waiters) and finishes any requests
+        still parked for a migration."""
+        ok = True
+        for eng in self.shards:
+            ok = eng.stop(drain=drain, timeout=timeout) and ok
+        with self._table_lock:
+            parked = [r for reqs in self._pending.values() for r in reqs]
+            self._pending = {h: [] for h in self._pending}
+        for req in parked:
+            req.finish()
+        return ok
+
+    def shutdown(self, wait: bool = True) -> None:
+        self.cluster.shutdown(wait=wait)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, prompt, max_new_tokens: int = 16, on_token=None, *,
+               key=None) -> Request:
+        import numpy as np
+        with self._id_lock:
+            rid = self._next_id
+            self._next_id += 1
+        req = Request(np.asarray(prompt, np.int32), max_new_tokens,
+                      id=rid, on_token=on_token, key=key)
+        req.hslot = affinity_hash(key if key is not None else rid,
+                                  self.n_hslots)
+        req.submit_ns = time.monotonic_ns()
+        self._count("submitted")
+        h = req.hslot
+        with self._table_lock:
+            pend = self._pending.get(h)
+            if pend is not None and len(pend) < _PENDING_LIMIT:
+                # hash slot mid-migration: park; flushed at commit/abort
+                pend.append(req)
+                self._count("parked")
+                return req
+            sid = self.table[h]
+        self.tracer.event("serve.submit", sid)
+        if self.shards[sid].offer(req):
+            return req
+        return self._shed(req, refused=sid)
+
+    def _shed(self, req: Request, refused: Optional[int] = None) -> Request:
+        """Affinity shard refused: redirect to the least-loaded shard,
+        dropping affinity (a shed request must not touch another shard's
+        ("sess", h) state), else reject."""
+        req.key = None
+        req.hslot = None
+        order = sorted((i for i in range(self.n_shards) if i != refused),
+                       key=lambda i: self.shards[i].load)
+        for sid in order:
+            if self.shards[sid].offer(req):
+                self._count("shed")
+                self.tracer.event("serve.shed", sid)
+                return req
+        req.rejected = True
+        self._count("rejected")
+        self.tracer.event("serve.reject", refused if refused is not None
+                          else 0)
+        req.finish()
+        return req
+
+    def wait(self, req: Request, timeout: float = 120.0) -> bool:
+        sid = req.shard_id if req.shard_id is not None else 0
+        return self.shards[sid].wait(req, timeout=timeout)
+
+    # ------------------------------------------------------------ migration
+    def migrate(self, h: int, dst_id: int, *, wait: bool = True,
+                timeout: float = 30.0) -> Optional[Migration]:
+        """Move hash slot ``h`` to shard ``dst_id`` (protocol: module
+        docstring). wait=True blocks until commit/abort and returns the
+        settled Migration; wait=False returns the in-flight handle (tests
+        cancel it mid-protocol)."""
+        with self._table_lock:
+            src_id = self.table[h]
+            if src_id == dst_id or h in self._pending:
+                return None
+            self._pending[h] = []
+        src = self.shards[src_id]
+        group = self.cluster.task_group(f"migrate:{h}", cancel_on_error=True)
+        mig = Migration(self, h, src_id, dst_id, group)
+        self._migrations[h] = mig
+        self._count("migrations")
+        self.tracer.event("serve.migrate.begin", h)
+        drained = src.seal(h)
+        t = self.cluster[src_id].spawn(
+            self._export_task, (mig, drained), name=f"migrate.export:{h}",
+            detached=True, group=group)
+        if t is None:  # group raced a cancel before the first spawn
+            self._settle_migration(mig)
+            return mig
+        if wait:
+            mig.wait(timeout=timeout)
+        return mig
+
+    def _export_task(self, mig: Migration, drained: threading.Event) -> None:
+        src = self.shards[mig.src_id]
+        rt = self.cluster[mig.src_id]
+        if not wait_event(rt, drained, f"serve.drain:{mig.h}"):
+            raise TimeoutError(
+                f"migration of hslot {mig.h}: source shard {mig.src_id} "
+                "did not drain")
+        san = rt.san
+        if san is not None:
+            # the drained handoff: the last retiring task on the source
+            # published this channel; observing it orders the export after
+            # every source-side touch of ("sess", h)
+            san.on_sync_acquire(("serve.drain", src.shard_id, mig.h))
+        state = src.export_session(mig.h)
+        # chain the install on the destination runtime inside the same
+        # cancellable group; the spawn edge carries the export's clock
+        t = self.cluster[mig.dst_id].spawn(
+            self._install_task, (mig, state),
+            name=f"migrate.install:{mig.h}", detached=True, group=mig.group)
+        if t is None:
+            raise RuntimeError(
+                f"migration of hslot {mig.h} cancelled before install")
+
+    def _install_task(self, mig: Migration, state: dict) -> None:
+        dst = self.shards[mig.dst_id]
+        try:
+            dst.install_session(mig.h, state)
+            self._commit(mig)
+        except BaseException:
+            # keep the destination clean so the abort path's single-owner
+            # invariant holds (the source still has its copy)
+            dst.drop_session(mig.h)
+            raise
+
+    def _commit(self, mig: Migration) -> None:
+        src = self.shards[mig.src_id]
+        dst = self.shards[mig.dst_id]
+        with self._table_lock:
+            if mig._finished.is_set():
+                # the migration was already settled as aborted (wait timed
+                # out while export straggled on the drain): the table stayed
+                # at the source, so this late install must not win — drop
+                # the destination copy instead
+                late = True
+            else:
+                late = False
+                # drop the source copy BEFORE the table flip: once the flip
+                # is visible, a fresh request can route to the destination
+                # and touch ("sess", h) concurrently with a post-flip drop
+                # (physically disjoint dicts, but the same global sanitizer
+                # address). Dropping first publishes the drop's clock into
+                # the per-hash-slot session channel, so every new-owner
+                # access is ordered after the source's last write.
+                src.drop_session(mig.h)
+                self.table[mig.h] = mig.dst_id
+                parked = self._pending.pop(mig.h, [])
+                mig.committed = True
+        if late:
+            dst.drop_session(mig.h)
+            return
+        src.unseal(mig.h)
+        self._count("commits")
+        self.tracer.event("serve.migrate.commit", mig.h)
+        self._flush_parked(parked, mig.dst_id)
+
+    def _settle_migration(self, mig: Migration) -> None:
+        """Post-wait settlement; aborts if the protocol didn't commit."""
+        if self._migrations.get(mig.h) is mig:
+            self._migrations.pop(mig.h, None)
+        with self._table_lock:
+            already = mig._finished.is_set()
+            mig._finished.set()
+            committed = mig.committed
+            parked = [] if committed or already \
+                else self._pending.pop(mig.h, [])
+        # a failed migration is HANDLED here (the abort path restores
+        # routing), so scrub its task errors from the member runtimes —
+        # cluster.shutdown must not re-raise what the abort absorbed. The
+        # errors stay inspectable on mig.errors.
+        with mig.group._errors_lock:
+            errs = list(mig.group._errors)
+            mig.group._errors.clear()
+        if errs:
+            mig.errors = mig.errors + tuple(errs)
+            ids = {id(e) for e in errs}
+            for rt in {self.cluster[mig.src_id], self.cluster[mig.dst_id]}:
+                with rt._errors_lock:
+                    rt._errors = [e for e in rt._errors
+                                  if id(e) not in ids]
+        if already or committed:
+            return
+        src = self.shards[mig.src_id]
+        src.unseal(mig.h)
+        self._count("aborts")
+        self.tracer.event("serve.migrate.abort", mig.h)
+        self._flush_parked(parked, mig.src_id)
+
+    def _flush_parked(self, parked: list, sid: int) -> None:
+        for req in parked:
+            if not self.shards[sid].offer(req):
+                self._shed(req, refused=sid)
+
+    # ------------------------------------------------------------ rebalance
+    def loads(self) -> list:
+        return [eng.load for eng in self.shards]
+
+    def rebalance(self, *, max_moves: int = 1, min_gap: int = 4,
+                  timeout: float = 30.0) -> int:
+        """Move up to ``max_moves`` hash slots from the hottest shard to
+        the coldest when their load gap exceeds ``min_gap``. Blocking;
+        returns the number of committed migrations."""
+        moved = 0
+        for _ in range(max_moves):
+            loads = self.loads()
+            hot = max(range(self.n_shards), key=lambda i: loads[i])
+            cold = min(range(self.n_shards), key=lambda i: loads[i])
+            if hot == cold or loads[hot] - loads[cold] < min_gap:
+                break
+            with self._table_lock:
+                owned = [h for h in range(self.n_hslots)
+                         if self.table[h] == hot and h not in self._pending]
+            if not owned:
+                break
+            # prefer the hash slot with the most queued work on the hot
+            # shard — that's the traffic the move actually shifts
+            depth: dict[int, int] = {h: 0 for h in owned}
+            q = self.shards[hot]._queue
+            with q.lock:
+                for r in q._q:
+                    if r.hslot in depth:
+                        depth[r.hslot] += 1
+            h = max(owned, key=lambda x: depth[x])
+            mig = self.migrate(h, cold, wait=True, timeout=timeout)
+            if mig is not None and mig.committed:
+                moved += 1
+            else:
+                break
+        return moved
+
+    # ------------------------------------------------------------ stats
+    def snapshot(self) -> dict:
+        """Aggregate + per-shard serve metrics (depths, latencies, counts)."""
+        per = []
+        lats: list = []
+        for eng in self.shards:
+            lat = list(eng.latencies_us)
+            lats.extend(lat)
+            per.append({"shard": eng.shard_id, "depth": eng._queue.depth,
+                        "load": eng.load, **eng.stats})
+        lats.sort()
+
+        def pct(p: float) -> float:
+            if not lats:
+                return 0.0
+            return float(lats[min(len(lats) - 1, int(p * len(lats)))])
+
+        with self._stats_lock:
+            top = dict(self.stats)
+        top.update({
+            "completed": sum(s["completed"] for s in per),
+            "double_completed": sum(s["double_completed"] for s in per),
+            "shard_rejected": sum(s["rejected"] for s in per),
+            "tokens": sum(s["tokens"] for s in per),
+            "p50_us": pct(0.50), "p95_us": pct(0.95), "p99_us": pct(0.99),
+            "shards": per})
+        return top

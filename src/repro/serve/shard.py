@@ -1,0 +1,96 @@
+"""Shard-side pieces of the scaled-out serve path.
+
+:class:`SimEngine` is an :class:`~repro.serve.engine.EngineCore` with a
+*simulated* model backend: prefill/decode "compute" is a ``time.sleep`` —
+deliberately, because that is how a dispatched accelerator kernel behaves
+from the runtime's point of view (the GIL is released for the duration).
+With N shards on N runtimes, N simulated decode iterations overlap exactly
+like N per-shard XLA dispatches would, which is what makes the servebench
+shard-scaling curve meaningful on a CPU-only box. Token values are
+deterministic (first = f(prompt), then +1 per step) so tests can assert
+exact outputs across migrations and cancellations.
+
+``wait_event`` is the explorer-aware Event wait used by the migration
+export task: under taskcheck's serialized schedules, a native
+``Event.wait`` would block the world (the explorer can't see it), so the
+wait is routed through ``exp.wait_until`` — the same pattern barrier() and
+TaskGroup.wait use.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.engine import EngineCore, Request
+
+_SIM_VOCAB = 50_000
+
+
+def wait_event(runtime, ev: threading.Event, label: str,
+               timeout: float = 30.0) -> bool:
+    """Wait on ``ev``; explorer-aware (see module docstring)."""
+    exp = runtime._explorer
+    if exp is not None:
+        st = exp.wait_until(ev.is_set, kind="serve-drain", label=label,
+                            timed=True)
+        if st != "disabled":
+            return ev.is_set()
+    return ev.wait(timeout)
+
+
+class SimEngine(EngineCore):
+    """EngineCore with a simulated, GIL-releasing model backend.
+
+    ``prefill_s`` / ``decode_s`` are the per-call service times. A decode
+    iteration costs ``decode_s`` regardless of how many slots are live —
+    the continuous-batching property the real batched decode has — so one
+    shard's sustained capacity is ``n_slots / decode_s`` tokens/s and the
+    servebench scaling guard has a closed-form reference.
+
+    ``fail_prefill(req)`` (tests only): raise from inside the prefill body
+    to exercise the cancel_on_error path."""
+
+    def __init__(self, runtime, *, n_slots: int = 4, max_seq: int = 256,
+                 shard_id: Optional[int] = None, queue_limit: int = 0,
+                 prefill_s: float = 0.0, decode_s: float = 0.0):
+        super().__init__(runtime, n_slots=n_slots, max_seq=max_seq,
+                         shard_id=shard_id, queue_limit=queue_limit)
+        self.prefill_s = prefill_s
+        self.decode_s = decode_s
+        self.fail_prefill = None
+
+    def _sleep(self, seconds: float) -> None:
+        # wall-clock compute model: skipped under the schedule explorer
+        # (it would stall the serialized world, and explored scenarios
+        # assert orderings, not timings)
+        if seconds > 0.0 and self.rt._explorer is None:
+            time.sleep(seconds)
+
+    def _prefill_exec(self, req: Request, slot: int) -> int:
+        if self.fail_prefill is not None:
+            self.fail_prefill(req)
+        self._sleep(self.prefill_s)
+        L = min(len(req.prompt), self.max_seq - req.max_new_tokens - 1)
+        self.pos[slot] = L
+        return int(np.sum(req.prompt[:L], dtype=np.int64) % _SIM_VOCAB)
+
+    def _decode_exec(self, live: list) -> np.ndarray:
+        self._sleep(self.decode_s)
+        nxt = np.zeros(self.n_slots, np.int64)
+        for i in live:
+            nxt[i] = (self.active[i].tokens[-1] + 1) % _SIM_VOCAB
+        return nxt
+
+
+def sim_engine_factory(*, n_slots: int = 4, max_seq: int = 256,
+                       queue_limit: int = 0, prefill_s: float = 0.0,
+                       decode_s: float = 0.0):
+    """engine_factory for ShardedServeEngine: one SimEngine per shard."""
+    def build(shard_id: int, runtime) -> SimEngine:
+        return SimEngine(runtime, n_slots=n_slots, max_seq=max_seq,
+                         shard_id=shard_id, queue_limit=queue_limit,
+                         prefill_s=prefill_s, decode_s=decode_s)
+    return build

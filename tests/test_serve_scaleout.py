@@ -1,0 +1,532 @@
+"""Sharded serve scale-out: router property/stress tests.
+
+Covers the serve-grade battery from the scale-out PR:
+- affinity_hash is deterministic, process-stable and balanced (property
+  tests under hypothesis; plain fallbacks without it)
+- slot partitioning / routing-table helpers
+- affinity routing: same key -> same shard, every time
+- burst backpressure: 10k simulated requests degrade to queueing +
+  shedding, with exact accounting (zero lost, zero double-completed)
+- migration: happy path moves session state; cancel mid-protocol leaves
+  pool.outstanding at baseline on both runtimes and the table at the
+  source; install failure triggers the cancel_on_error abort path
+- stop(drain=False) mid-burst across shards releases every waiter
+- RuntimeCluster basics and a fully sanitized sharded run (clean)
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; the rest runs without it
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on minimal checkouts
+    HealthCheck = given = settings = st = None
+
+from repro.core.runtime import RuntimeCluster, TaskRuntime
+from repro.dist.partitioning import (affinity_hash, build_slot_table,
+                                     partition_slots)
+from repro.serve import ShardedServeEngine, SimEngine, sim_engine_factory
+
+# under `make sanitize-smoke` every access is shadow-checked; keep the
+# stress sizes CI-friendly there
+_SAN = bool(os.environ.get("REPRO_SANITIZE"))
+BURST = 600 if _SAN else 10_000
+
+
+def drain_pool(rt, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while rt.pool.outstanding and time.monotonic() < deadline:
+        time.sleep(0.005)
+    return rt.pool.outstanding
+
+
+def make_router(n_shards=2, **kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("queue_limit", 64)
+    kw.setdefault("n_slots", 4)
+    return ShardedServeEngine(n_shards, **kw)
+
+
+def complete_all(router, reqs, timeout=120.0):
+    deadline = time.monotonic() + timeout
+    for r in reqs:
+        left = max(0.1, deadline - time.monotonic())
+        assert router.wait(r, timeout=left), f"request {r.id} never finished"
+
+
+# --------------------------------------------------------------------------
+# affinity hash + partitioning helpers
+# --------------------------------------------------------------------------
+
+def test_affinity_hash_deterministic_and_known_range():
+    for key in ["user:1", "user:2", b"raw-bytes", 12345, ("t", 1)]:
+        h1 = affinity_hash(key, 64)
+        h2 = affinity_hash(key, 64)
+        assert h1 == h2
+        assert 0 <= h1 < 64
+    with pytest.raises(ValueError):
+        affinity_hash("x", 0)
+
+
+def test_affinity_hash_is_not_builtin_hash():
+    # FNV-1a over the encoded key: stable across processes, unlike hash()
+    # under PYTHONHASHSEED. Pin a couple of values so any accidental change
+    # of the hash function (which would reshuffle every deployed key ->
+    # shard mapping) fails loudly.
+    assert affinity_hash("user:1", 64) == affinity_hash(b"user:1", 64)
+    assert affinity_hash(7, 64) == affinity_hash("7", 64)
+
+
+def test_affinity_hash_balanced_plain():
+    n = 64
+    counts = [0] * n
+    for i in range(4096):
+        counts[affinity_hash(f"key-{i}", n)] += 1
+    mean = 4096 / n
+    assert min(counts) > 0
+    assert max(counts) < mean * 2.5
+
+
+def test_partition_slots_contiguous_and_balanced():
+    for n_slots, n_shards in [(8, 2), (7, 3), (1, 4), (0, 2), (16, 16)]:
+        parts = partition_slots(n_slots, n_shards)
+        assert len(parts) == n_shards
+        flat = [i for r in parts for i in r]
+        assert flat == list(range(n_slots))
+        sizes = [len(r) for r in parts]
+        assert max(sizes) - min(sizes) <= 1
+    with pytest.raises(ValueError):
+        partition_slots(4, 0)
+
+
+def test_build_slot_table_covers_all_shards():
+    for n_hslots, n_shards in [(64, 2), (64, 4), (7, 3), (5, 8)]:
+        table = build_slot_table(n_hslots, n_shards)
+        assert len(table) == n_hslots
+        assert all(0 <= s < n_shards for s in table)
+        counts = [table.count(s) for s in range(n_shards)]
+        if n_hslots >= n_shards:
+            assert min(counts) >= n_hslots // n_shards
+
+
+if st is None:
+    def test_property_affinity_hash():
+        pytest.importorskip("hypothesis")
+
+    def test_property_partition_slots():
+        pytest.importorskip("hypothesis")
+else:
+    @settings(deadline=None, max_examples=200,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.text(min_size=0, max_size=64), st.integers(1, 1024))
+    def test_property_affinity_hash(key, n):
+        h = affinity_hash(key, n)
+        assert 0 <= h < n
+        assert h == affinity_hash(key, n)
+        # str/bytes agree: the wire form of a key routes identically
+        assert h == affinity_hash(key.encode("utf-8"), n)
+
+    @settings(deadline=None, max_examples=200,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 512), st.integers(1, 64))
+    def test_property_partition_slots(n_slots, n_shards):
+        parts = partition_slots(n_slots, n_shards)
+        assert [i for r in parts for i in r] == list(range(n_slots))
+        sizes = [len(r) for r in parts]
+        assert max(sizes) - min(sizes) <= 1
+        table = build_slot_table(max(1, n_slots), n_shards)
+        assert all(0 <= s < n_shards for s in table)
+
+
+# --------------------------------------------------------------------------
+# RuntimeCluster
+# --------------------------------------------------------------------------
+
+def test_cluster_basics():
+    with RuntimeCluster(3, n_workers=2, name="c") as cl:
+        assert len(cl) == 3
+        assert [rt.name for rt in cl.runtimes] == ["c0", "c1", "c2"]
+        hits = []
+        lock = threading.Lock()
+
+        def work(i):
+            with lock:
+                hits.append(i)
+
+        for i, rt in enumerate(cl.runtimes):
+            rt.spawn(work, (i,), detached=True)
+        assert cl.barrier(timeout=10.0)
+        assert sorted(hits) == [0, 1, 2]
+        s = cl.stats()
+        assert len(s["runtimes"]) == 3
+        assert s["pending"] == 0
+    # post-shutdown: every member's pool drained
+    for rt in cl.runtimes:
+        assert rt.pool.outstanding == 0
+
+
+def test_cluster_cross_runtime_group():
+    with RuntimeCluster(2, n_workers=2, name="x") as cl:
+        g = cl.task_group("span")
+        done = []
+        lock = threading.Lock()
+
+        def work(i):
+            with lock:
+                done.append(i)
+
+        for i, rt in enumerate(cl.runtimes):
+            rt.spawn(work, (i,), detached=True, group=g)
+        assert g.wait(timeout=10.0)
+        assert sorted(done) == [0, 1]
+
+
+# --------------------------------------------------------------------------
+# routing
+# --------------------------------------------------------------------------
+
+def test_router_affinity_same_key_same_shard():
+    router = make_router(4).start()
+    try:
+        reqs = []
+        for rep in range(3):
+            for k in range(12):
+                reqs.append(router.submit(np.arange(4), 2, key=f"user:{k}"))
+        complete_all(router, reqs)
+        by_key = {}
+        for r in reqs:
+            by_key.setdefault(r.key, set()).add(r.shard_id)
+        for key, shards in by_key.items():
+            assert len(shards) == 1, f"key {key} landed on shards {shards}"
+        snap = router.snapshot()
+        assert snap["completed"] == len(reqs)
+        assert snap["double_completed"] == 0
+        assert snap["rejected"] == 0
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+
+
+def test_router_keyless_requests_spread():
+    router = make_router(4, n_hslots=64).start()
+    try:
+        reqs = [router.submit(np.arange(4), 1) for _ in range(64)]
+        complete_all(router, reqs)
+        used = {r.shard_id for r in reqs}
+        assert len(used) >= 3, f"keyless spread degenerate: {used}"
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+
+
+def test_router_sheds_to_least_loaded_then_rejects():
+    # tiny queues + slow decode: the affinity shard fills, the router sheds
+    # to its sibling, and once both queues are full it rejects — nothing
+    # blocks, nothing vanishes
+    router = make_router(2, queue_limit=2, n_slots=1, decode_s=0.01).start()
+    try:
+        reqs = [router.submit(np.arange(4), 4, key="hot") for _ in range(40)]
+        complete_all(router, reqs)
+        rejected = [r for r in reqs if r.rejected]
+        completed = [r for r in reqs if not r.rejected]
+        snap = router.snapshot()
+        assert snap["shed"] > 0, "full affinity queue never shed"
+        assert len(rejected) == snap["rejected"]
+        assert len(completed) == snap["completed"]
+        assert len(rejected) + len(completed) == len(reqs)
+        assert snap["double_completed"] == 0
+        for r in rejected:
+            assert not r.tokens, "rejected request produced tokens"
+        # a shed request must have dropped its affinity key (it must not
+        # touch another shard's copy of the session address space)
+        shed_reqs = [r for r in completed if r.key is None]
+        assert len(shed_reqs) >= snap["shed"] - snap["rejected"] - 1
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+
+
+# --------------------------------------------------------------------------
+# burst backpressure (the 10k stress)
+# --------------------------------------------------------------------------
+
+def test_burst_backpressure_exact_accounting():
+    """BURST requests thrown at 4 shards with bounded queues: every single
+    request terminates exactly once (completed or rejected), no waiter
+    blocks, and queue depths stay within their bound throughout."""
+    router = make_router(4, queue_limit=32, n_slots=8).start()
+    completions = []
+    comp_lock = threading.Lock()
+    for eng in router.shards:
+        def on_complete(req, _l=comp_lock):
+            with _l:
+                completions.append(req.id)
+        eng.on_complete = on_complete
+    try:
+        reqs = []
+        for i in range(BURST):
+            key = f"sess:{i % 97}" if i % 3 else None
+            reqs.append(router.submit(np.arange(8), 2, key=key))
+            if i % 500 == 0:
+                for eng in router.shards:
+                    assert eng._queue.depth <= 32
+        complete_all(router, reqs, timeout=300.0)
+        snap = router.snapshot()
+        n_rej = sum(1 for r in reqs if r.rejected)
+        assert snap["submitted"] == BURST
+        assert snap["completed"] + n_rej == BURST, \
+            f"lost requests: {snap['completed']}+{n_rej} != {BURST}"
+        assert snap["double_completed"] == 0
+        # exactly-once also via the completion hook: no id twice
+        with comp_lock:
+            assert len(completions) == len(set(completions))
+            assert len(completions) == snap["completed"]
+        for r in reqs:
+            if not r.rejected:
+                assert len(r.tokens) == 1 + 2  # first + max_new_tokens
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+    for rt in router.cluster.runtimes:
+        assert rt.pool.outstanding == 0
+
+
+def test_stop_no_drain_mid_burst_releases_all_waiters():
+    router = make_router(3, queue_limit=128, n_slots=2,
+                         decode_s=0.005).start()
+    reqs = [router.submit(np.arange(4), 64, key=f"u:{i % 13}")
+            for i in range(120)]
+    # let the burst get into flight, then yank the engines mid-decode
+    time.sleep(0.05)
+    router.stop(drain=False)
+    for r in reqs:
+        assert r.done_event.wait(10.0), \
+            f"request {r.id} left blocked after stop(drain=False)"
+    router.shutdown()
+    for rt in router.cluster.runtimes:
+        assert drain_pool(rt) == 0, "cancelled shard leaked pooled tasks"
+
+
+# --------------------------------------------------------------------------
+# migration
+# --------------------------------------------------------------------------
+
+def _keys_for_hslot(router, h, n=4):
+    """Generate keys whose affinity hash is exactly ``h``."""
+    out = []
+    i = 0
+    while len(out) < n:
+        k = f"mig:{i}"
+        if affinity_hash(k, router.n_hslots) == h:
+            out.append(k)
+        i += 1
+    return out
+
+
+def test_migration_moves_session_state():
+    router = make_router(2).start()
+    try:
+        key = "sticky"
+        h = affinity_hash(key, router.n_hslots)
+        src_id = router.table[h]
+        dst_id = 1 - src_id
+        r1 = router.submit(np.arange(4), 2, key=key)
+        complete_all(router, [r1])
+        assert r1.shard_id == src_id
+        assert h in router.shards[src_id].sessions
+        mig = router.migrate(h, dst_id, wait=True)
+        assert mig is not None and mig.committed
+        assert router.table[h] == dst_id
+        assert h not in router.shards[src_id].sessions
+        sess = router.shards[dst_id].sessions[h]
+        assert sess[key]["hits"] == 1
+        # service continues on the new owner, session history intact
+        r2 = router.submit(np.arange(4), 2, key=key)
+        complete_all(router, [r2])
+        assert r2.shard_id == dst_id
+        assert router.shards[dst_id].sessions[h][key]["hits"] == 2
+        # source unsealed: a no-op migrate back also works
+        mig2 = router.migrate(h, src_id, wait=True)
+        assert mig2.committed
+        snap = router.snapshot()
+        assert snap["commits"] == 2 and snap["aborts"] == 0
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+
+
+def test_migration_parks_then_flushes_arrivals():
+    # hold the drain open with a slow in-flight request for h, migrate
+    # without waiting, submit more arrivals for h -> they park; at commit
+    # they flush to the new owner
+    router = make_router(2, decode_s=0.01).start()
+    try:
+        key = "parked"
+        h = affinity_hash(key, router.n_hslots)
+        src_id = router.table[h]
+        dst_id = 1 - src_id
+        slow = router.submit(np.arange(4), 8, key=key)
+        time.sleep(0.02)  # let it admit so the hslot is not yet quiet
+        mig = router.migrate(h, dst_id, wait=False)
+        assert mig is not None
+        parked = [router.submit(np.arange(4), 1, key=key) for _ in range(5)]
+        assert router.stats["parked"] >= 1
+        assert mig.wait(timeout=30.0), f"migration aborted: {mig.errors}"
+        complete_all(router, [slow] + parked)
+        assert router.table[h] == dst_id
+        for r in parked:
+            assert r.shard_id == dst_id and not r.rejected
+        snap = router.snapshot()
+        assert snap["double_completed"] == 0
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+
+
+def test_migration_under_cancel_restores_baseline():
+    """Cancel mid-protocol: the table stays at the source, the source is
+    unsealed (service continues), parked arrivals flush back, and both
+    member runtimes return to pool.outstanding == 0 — the cancelled
+    export/install tasks neither leak nor poison cluster shutdown."""
+    router = make_router(2, decode_s=0.01).start()
+    key = "cancelme"
+    h = affinity_hash(key, router.n_hslots)
+    src_id = router.table[h]
+    dst_id = 1 - src_id
+    # keep the hash slot busy so the export task is still waiting on the
+    # drain when the cancel lands
+    slow = router.submit(np.arange(4), 20, key=key)
+    time.sleep(0.02)
+    mig = router.migrate(h, dst_id, wait=False)
+    assert mig is not None
+    parked = [router.submit(np.arange(4), 1, key=key) for _ in range(3)]
+    mig.cancel()
+    committed = mig.wait(timeout=30.0)
+    assert not committed
+    assert router.table[h] == src_id, "aborted migration flipped the table"
+    assert h not in router.shards[src_id]._sealed
+    assert h not in router.shards[dst_id].sessions
+    complete_all(router, [slow] + parked)
+    for r in parked:
+        assert not r.rejected and r.shard_id == src_id
+    # service on h still works after the abort
+    again = router.submit(np.arange(4), 1, key=key)
+    complete_all(router, [again])
+    assert again.shard_id == src_id
+    snap = router.snapshot()
+    assert snap["aborts"] == 1 and snap["commits"] == 0
+    assert snap["double_completed"] == 0
+    router.stop(drain=True)
+    router.shutdown()  # must NOT re-raise the handled cancellation
+    for rt in {router.cluster[src_id], router.cluster[dst_id]}:
+        assert rt.pool.outstanding == 0, "migration leaked pooled tasks"
+
+
+def test_migration_install_failure_aborts_consistently():
+    """An install-side crash runs the cancel_on_error path: the error is
+    absorbed by the abort (inspectable on mig.errors), the destination
+    holds no partial session copy, and the source stays authoritative."""
+    router = make_router(2).start()
+    key = "failing"
+    h = affinity_hash(key, router.n_hslots)
+    src_id = router.table[h]
+    dst_id = 1 - src_id
+    r1 = router.submit(np.arange(4), 2, key=key)
+    complete_all(router, [r1])
+
+    def boom(_h, _state):
+        raise RuntimeError("install blew up")
+    router.shards[dst_id].install_session = boom
+    mig = router.migrate(h, dst_id, wait=True)
+    assert mig is not None and not mig.committed
+    assert any(isinstance(e, RuntimeError) for e in mig.errors)
+    assert router.table[h] == src_id
+    assert h in router.shards[src_id].sessions
+    assert h not in router.shards[dst_id].sessions
+    # the absorbed error must not re-raise at cluster shutdown
+    r2 = router.submit(np.arange(4), 1, key=key)
+    complete_all(router, [r2])
+    assert r2.shard_id == src_id
+    router.stop(drain=True)
+    router.shutdown()
+
+
+def test_rebalance_moves_hot_hslot():
+    router = make_router(2, queue_limit=256, n_slots=1,
+                         decode_s=0.02).start()
+    try:
+        key = "whale"
+        h = affinity_hash(key, router.n_hslots)
+        hot = router.table[h]
+        for _ in range(12):
+            router.submit(np.arange(4), 4, key=key)
+        time.sleep(0.02)
+        assert router.loads()[hot] > router.loads()[1 - hot]
+        moved = router.rebalance(max_moves=1, min_gap=4, timeout=60.0)
+        assert moved == 1
+        assert router.table[h] == 1 - hot
+    finally:
+        router.stop(drain=True)
+        router.shutdown()
+
+
+# --------------------------------------------------------------------------
+# sanitized sharded run
+# --------------------------------------------------------------------------
+
+def test_sharded_serve_sanitized_clean():
+    """Full sharded run — bursty keyed traffic plus a live migration —
+    under the sanitizer in raising mode. The shard-namespaced addresses
+    plus the session sync channels must make this clean; a spurious
+    finding (e.g. the migration export racing the last retiring decode)
+    raises at shutdown."""
+    router = ShardedServeEngine(2, n_workers=2, queue_limit=64, n_slots=2,
+                                sanitize=True).start()
+    try:
+        key = "checked"
+        h = affinity_hash(key, router.n_hslots)
+        dst = 1 - router.table[h]
+        reqs = [router.submit(np.arange(4), 2,
+                              key=key if i % 2 else f"bg:{i}")
+                for i in range(24)]
+        mig = router.migrate(h, dst, wait=True)
+        assert mig is not None and mig.committed
+        reqs += [router.submit(np.arange(4), 2, key=key) for _ in range(6)]
+        complete_all(router, reqs)
+        snap = router.snapshot()
+        assert snap["double_completed"] == 0
+    finally:
+        router.stop(drain=True)
+        router.shutdown()  # raises on any data-race / lost-wake finding
+    assert router.cluster.san is not None
+    assert not router.cluster.san.findings
+
+
+# --------------------------------------------------------------------------
+# SimEngine determinism (what migration/cancel tests rely on)
+# --------------------------------------------------------------------------
+
+def test_sim_engine_tokens_deterministic():
+    rt = TaskRuntime(n_workers=2)
+    with rt:
+        eng = SimEngine(rt, n_slots=2).start()
+        r = eng.submit(np.array([3, 5, 7], np.int32), 3)
+        assert eng.wait(r, timeout=30.0)
+        eng.stop(drain=True)
+        first = (3 + 5 + 7) % 50_000
+        assert r.tokens == [first, first + 1, first + 2, first + 3]
+
+
+def test_sim_engine_factory_per_shard():
+    with RuntimeCluster(2, n_workers=1, name="f") as cl:
+        build = sim_engine_factory(n_slots=3, queue_limit=7)
+        engs = [build(i, cl[i]) for i in range(2)]
+        assert [e.shard_id for e in engs] == [0, 1]
+        assert all(e.n_slots == 3 for e in engs)
+        assert all(e._queue.limit == 7 for e in engs)
+        # shard-namespaced addresses must not alias
+        assert engs[0]._slot_addr(0) != engs[1]._slot_addr(0)
+        assert engs[0]._addr("decode") != engs[1]._addr("decode")

@@ -511,3 +511,87 @@ def test_lint_clean_on_repo_source():
     root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
     findings = run_lint([root])
     assert findings == [], findings
+
+
+# ----------------------------------------------- manual sync channels
+# The serve router's session state is guarded by an engine-side lock the
+# dependency system never sees; on_manual_access checks such accesses and
+# on_sync_release/on_sync_acquire teach the sanitizer the lock's (and the
+# migration seal->drain handoff's) happens-before edges. The "without"
+# tests pin the pre-fix behaviour: lock-ordered accesses with no channel
+# are indistinguishable from a race, so the sharded serve path would
+# report spurious write-write findings on every session handoff.
+
+def _lock_ordered_accesses(rt, *, channel):
+    """Two tasks touch ("state",) in a real (event-enforced) order that
+    only a sync channel can make visible to the sanitizer."""
+    first_done = threading.Event()
+
+    def writer_a():
+        rt.san.on_manual_access(("state",))
+        if channel:
+            rt.san.on_sync_release("chan")
+        first_done.set()
+
+    def writer_b():
+        assert first_done.wait(10)
+        if channel:
+            rt.san.on_sync_acquire("chan")
+        rt.san.on_manual_access(("state",))
+
+    with rt:
+        rt.spawn(writer_a, name="a")
+        rt.spawn(writer_b, name="b")
+        assert rt.barrier(timeout=30)
+
+
+def test_manual_access_without_channel_reports_spurious_race():
+    # pre-fix shape: the accesses ARE ordered (by the event standing in
+    # for a lock), but without a channel the sanitizer can't know
+    rt = TaskRuntime(n_workers=2, sanitize="report")
+    _lock_ordered_accesses(rt, channel=False)
+    assert tsan_mod.RACE_WW in {f.kind for f in rt.san.findings}
+
+
+def test_manual_access_with_sync_channel_is_clean():
+    rt = TaskRuntime(n_workers=2, sanitize=True)
+    _lock_ordered_accesses(rt, channel=True)
+    _assert_clean(rt)
+
+
+def test_manual_access_from_non_task_thread():
+    # the submit/migration-control paths run on client threads, not tasks:
+    # the sanitizer models them as ambient per-thread nodes, and channels
+    # carry clocks from them into tasks just the same
+    rt = TaskRuntime(n_workers=2, sanitize=True)
+    with rt:
+        rt.san.on_manual_access(("cfg",))      # main thread writes
+        rt.san.on_sync_release("cfg-ready")
+
+        def reader():
+            rt.san.on_sync_acquire("cfg-ready")
+            rt.san.on_manual_access(("cfg",), "r")
+        rt.spawn(reader, name="r")
+        assert rt.barrier(timeout=30)
+    _assert_clean(rt)
+
+
+def test_manual_access_races_declared_reader():
+    # a manual rw on an address some in-flight task declared READ on must
+    # report read-write — the mechanism behind the seeded migration-vs-
+    # decode serve scenario in repro.analyze.scenarios
+    rt = TaskRuntime(n_workers=2, sanitize="report")
+    with rt:
+        in_body = threading.Event()
+        release = threading.Event()
+
+        def reader():
+            in_body.set()
+            assert release.wait(10)
+
+        rt.spawn(reader, reads=[("slot", 0)], name="decode")
+        assert in_body.wait(10)
+        rt.san.on_manual_access(("slot", 0))   # rogue migration write
+        release.set()
+        assert rt.barrier(timeout=30)
+    assert tsan_mod.RACE_RW in {f.kind for f in rt.san.findings}

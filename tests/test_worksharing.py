@@ -269,6 +269,42 @@ def test_cancelled_group_refuses_taskloop_admission():
     rt.shutdown()
 
 
+def test_cancelled_loop_refuses_joins_while_draining():
+    """Regression: a cancelled loop with a participant still in must
+    refuse new joins and stop asking the board for service. Idle workers
+    admitted here rotate through join/leave forever and ``_ws_active``
+    never reaches the zero ``ws_leave`` finalizes at — a livelock the
+    sanitized cancel test hit on the 1-core box."""
+    ws = WorksharingTask()
+    ws.reset()
+    ws.init(lambda lo, hi: None)
+    ws.init_loop(0, 100, 1, lambda lo, hi: None)
+    ws.ws_publish()
+    assert ws.ws_join()                      # participant A in
+    assert ws.ws_claim() == 0
+    assert ws.ws_cancel()
+    assert not ws.ws_needs_service(), \
+        "cancelled loop with an active participant drains on its own"
+    assert not ws.ws_join(), \
+        "latecomer admitted into a cancelled loop mid-drain"
+    assert ws.ws_leave(), "A is last out and runs the finalize"
+    assert not ws.ws_join(), "join after close must be refused"
+
+    # cancelled before anyone joined: the board must keep offering it so
+    # exactly one joiner can run the finalize
+    ws2 = WorksharingTask()
+    ws2.reset()
+    ws2.init(lambda lo, hi: None)
+    ws2.init_loop(0, 10, 1, lambda lo, hi: None)
+    ws2.ws_publish()
+    assert ws2.ws_cancel()
+    assert ws2.ws_needs_service(), "cancelled-before-join must be served"
+    assert ws2.ws_join()
+    assert not ws2.ws_needs_service(), "finalizer is in — stop offering"
+    assert ws2.ws_claim() is None, "no chunks from a cancelled loop"
+    assert ws2.ws_leave()
+
+
 # ---------------------------------------------------------- collaboration
 def test_multiple_workers_participate():
     """With slow chunks and several workers, more than one worker must
