@@ -2,7 +2,7 @@
 # ROADMAP.md; no install step is needed.
 PY ?= python
 
-.PHONY: verify lint sanitize-smoke explore-smoke bench-smoke servebench-smoke bench-wake bench ci
+.PHONY: verify lint sanitize-smoke explore-smoke bench-smoke servebench-smoke tune-smoke bench-wake bench ci
 
 verify:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -27,10 +27,13 @@ bench-smoke:
 servebench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/servebench.py --smoke --json servebench-smoke.json
 
+tune-smoke:
+	FAST=1 PYTHONPATH=src $(PY) benchmarks/taskbench.py --adversarial --json taskbench-tune.json
+
 bench-wake:
 	PYTHONPATH=src $(PY) benchmarks/taskbench.py --wake-latency --workers 8 --json taskbench-wake.json
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-ci: lint verify sanitize-smoke explore-smoke bench-smoke servebench-smoke
+ci: lint verify sanitize-smoke explore-smoke bench-smoke servebench-smoke tune-smoke

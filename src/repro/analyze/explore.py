@@ -288,6 +288,16 @@ class ScheduleExplorer:
         runtime._parking.exp = self
         sched = runtime.scheduler
         sched._explorer = self
+        self._watch_sched_locks(getattr(sched, "_impl", sched))
+        if hasattr(sched, "impl_watchers"):
+            # SwitchableScheduler facade: a hot-swap must publish its new
+            # implementation with the locks already under exploration —
+            # an unwatched contended lock would native-spin and wedge the
+            # serialized world
+            sched.impl_watchers.append(self._watch_sched_locks)
+
+    def _watch_sched_locks(self, sched) -> None:
+        """Watch one scheduler implementation's internal locks."""
         lk = getattr(sched, "_lock", None)
         if lk is not None and hasattr(lk, "lock"):
             self.watch_lock(lk, "scheduler.lock")

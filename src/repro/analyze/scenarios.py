@@ -24,6 +24,7 @@ from repro.analyze.tsan import LOST_WAKE, RACE_RW, WS_LOST_CHUNK
 from repro.core.locks import TicketLock
 from repro.core.parking import ParkingLot
 from repro.core.runtime import TaskRuntime, current_task
+from repro.core.scheduler import SwitchableScheduler
 from repro.core.task import WorksharingTask
 
 
@@ -209,6 +210,36 @@ def _clean_ws(scheduler, deps):
             rt.shutdown()
     scenario.__name__ = f"clean_ws_{scheduler}_{deps}"
     return scenario
+
+
+def clean_tune_switch(exp):
+    """Mid-workload scheduler hot-swap racing task enqueue: workers spawn
+    successors while main retunes through every kind (and back), so
+    producer-side adds hit the switch gate in every explored interleaving.
+    The drain-and-switch quiescent point must never strand a task — the
+    barrier completes and every body ran exactly once."""
+    rt = TaskRuntime(n_workers=2, explore=exp)
+    rt.start()
+    try:
+        out = []
+
+        def chain(i, n):
+            out.append((i, n))
+            if n:
+                rt.spawn(chain, (i, n - 1), name=f"c{i}.{n}")
+
+        for i in range(2):
+            rt.spawn(chain, (i, 2), name=f"c{i}")
+        rt.retune(scheduler="work-stealing")
+        rt.spawn(chain, (2, 1), name="c2")
+        rt.retune(scheduler="delegation", policy="lifo")
+        rt.barrier()
+        assert sorted(out) == sorted(
+            [(0, 2), (0, 1), (0, 0), (1, 2), (1, 1), (1, 0),
+             (2, 1), (2, 0)]), out
+        assert rt.scheduler.switches == 2
+    finally:
+        rt.shutdown()
 
 
 def clean_serve_sim(exp):
@@ -492,6 +523,49 @@ def bug_serve_migration_race(exp):
                     break
 
 
+class NoDrainSwitch(SwitchableScheduler):
+    """DELIBERATE BUG: publishes the new scheduler implementation without
+    closing the producer gate, quiescing in-flight adds, or draining the
+    retiring implementation's queues — everything the drain-and-switch
+    protocol exists to do. A task enqueued before (or racing) the switch
+    is stranded in an implementation nobody polls again: the runtime
+    never quiesces, which the no-progress watchdog condemns."""
+
+    def switch(self, kind=None, policy=None):
+        kind = kind or self.kind
+        policy = policy or self.policy
+        self._impl = self._make_impl(kind, policy)  # BUG: old queue dropped
+        self.kind, self.policy = kind, policy
+        self.switches += 1
+        return 0
+
+
+def bug_tune_stranded_task(exp):
+    """Policy switch racing task enqueue under the buggy no-drain switch
+    (see :class:`NoDrainSwitch`): a schedule where a task is still queued
+    (or a producer mid-add) when the swap publishes leaves it stranded —
+    no finalize ever happens again and the watchdog reports a livelock."""
+    rt = TaskRuntime(n_workers=1, explore=exp)
+    # swap the buggy switch implementation in before any worker starts
+    # (attributes are layout-compatible; only the methods change)
+    rt.scheduler.__class__ = NoDrainSwitch
+    rt.start()
+    try:
+        out = []
+        for i in range(4):
+            rt.spawn(lambda i=i: out.append(i))
+        rt.retune(scheduler="work-stealing")  # strands still-queued tasks
+        # wait for the bodies the way the convoy scenario does: yielding
+        # decisions without progress until the watchdog condemns the
+        # schedule (bounded so the post-finding native drain terminates)
+        for _ in range(200_000):
+            if len(out) == 4:
+                break
+            checkpoint()
+    finally:
+        rt.shutdown(wait=False)
+
+
 # --------------------------------------------------------------- registry
 CLEAN = {
     "spawn-barrier": clean_spawn_barrier,
@@ -503,6 +577,7 @@ CLEAN = {
     "eventcount-parking": clean_eventcount_parking,
     "work-stealing": clean_work_stealing,
     "group-cancel": clean_group_cancel,
+    "tune-switch": clean_tune_switch,
     "serve-sim": clean_serve_sim,
     "serve-sharded": clean_serve_sharded,
     "data-pipeline": clean_data_pipeline,
@@ -549,5 +624,11 @@ SEEDED = {
         "scenario": bug_serve_migration_race,
         "expect": {RACE_RW},
         "explore": {"schedules": 30, "seed": 0, "bound": 2},
+    },
+    "tune-stranded-task": {
+        "scenario": bug_tune_stranded_task,
+        "expect": {LIVELOCK},
+        "explore": {"schedules": 10, "seed": 0, "bound": 2,
+                    "watchdog": 200},
     },
 }

@@ -270,6 +270,16 @@ class TaskSanitizer:
         runtime.pool.san = self
         runtime._parking.san = self
         sched = runtime.scheduler
+        self._watch_sched_locks(getattr(sched, "_impl", sched))
+        if hasattr(sched, "impl_watchers"):
+            # SwitchableScheduler facade: a hot-swap builds a fresh
+            # implementation with fresh locks — watch those too, before
+            # the new impl is published
+            sched.san = self
+            sched.impl_watchers.append(self._watch_sched_locks)
+
+    def _watch_sched_locks(self, sched) -> None:
+        """Watch one scheduler implementation's internal locks."""
         for attr, label in (("_lock", "scheduler.dtlock"),):
             lk = getattr(sched, attr, None)
             if lk is not None and hasattr(lk, "lock"):

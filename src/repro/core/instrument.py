@@ -67,6 +67,12 @@ EVENTS = {
     "serve.migrate.commit": 39,  # routing table flipped to dst (arg: hslot)
     "serve.migrate.abort": 40,   # migration cancelled/failed; src retained
                                  # ownership (arg: hslot)
+    "tune.signal": 41,      # pathology detected by the online detector
+                            # (arg: repro.core.tune.SIGNAL_IDS code)
+    "tune.switch": 42,      # scheduler/policy hot-swap committed
+                            # (arg: drained task count moved across)
+    "tune.knob": 43,        # runtime knob adjusted (park bounds, wake
+                            # fan-out, EWMA mult); arg: KNOB_IDS code
 }
 
 
@@ -163,6 +169,107 @@ class Tracer:
             for _, eid, _ in buf.records:
                 k = inv.get(eid, str(eid))
                 out[k] = out.get(k, 0) + 1
+        return out
+
+
+# --------------------------------------------------------------- counters
+# The tracer above records *per-event* call sites: great for offline
+# analysis, but a controller that samples the runtime tens of times per
+# second must not pay a callback per event. The counter plane is the
+# near-zero-overhead alternative: per-worker counter structs (one writer
+# each — the owning worker thread — so plain int `+=` is exact under the
+# GIL) that hot paths bump unconditionally and a controller thread *samples*
+# by reading the attributes racily. Reads of ints/floats cannot tear under
+# the GIL; a sample is at worst one increment stale per counter.
+
+_EWMA_TASK_ALPHA = 0.08  # task-duration smoothing (and its square, for CV)
+
+
+class WorkerCounters:
+    """One worker's counter cache line. Single writer (the owning worker);
+    any thread may read. ``shared`` instances (wid < 0) are multi-writer
+    and therefore racy-but-monotonic: a lost increment under-counts, which
+    the detector tolerates (rates, not ledgers)."""
+
+    __slots__ = ("wid", "tasks_done", "tasks_cancelled", "chunks_done",
+                 "busy_ns", "ewma_task_ns", "ewma_task_sq",
+                 "steals_hit", "steals_miss", "delegated", "served",
+                 "fallbacks", "created")
+
+    def __init__(self, wid: int = -1):
+        self.wid = wid
+        self.tasks_done = 0       # task bodies run to completion
+        self.tasks_cancelled = 0  # dropped-at-dequeue group members
+        self.chunks_done = 0      # worksharing chunks executed
+        self.busy_ns = 0          # total body wall time
+        self.ewma_task_ns = 0.0   # smoothed task duration
+        self.ewma_task_sq = 0.0   # smoothed squared duration (bimodality)
+        self.steals_hit = 0       # work-stealing: steal found a task
+        self.steals_miss = 0      # work-stealing: full victim scan empty
+        self.delegated = 0        # delegation: task served while waiting
+        self.served = 0           # delegation: tasks served to waiters
+        self.fallbacks = 0        # producer blocked as DTLock ticket waiter
+        self.created = 0          # tasks spawned by this thread class
+
+    def on_task(self, dur_ns: int) -> None:
+        """Task body finished; fold its duration into the EWMAs."""
+        self.tasks_done += 1
+        self.busy_ns += dur_ns
+        e = self.ewma_task_ns
+        if e == 0.0:
+            self.ewma_task_ns = float(dur_ns)
+            self.ewma_task_sq = float(dur_ns) * dur_ns
+        else:
+            self.ewma_task_ns = e + _EWMA_TASK_ALPHA * (dur_ns - e)
+            self.ewma_task_sq += _EWMA_TASK_ALPHA * \
+                (float(dur_ns) * dur_ns - self.ewma_task_sq)
+
+
+class CounterPlane:
+    """Per-worker counter structs plus one shared struct for threads that
+    are not runtime workers (external producers, the switch drainer).
+    ``snapshot()`` merges everything into one flat dict — the controller
+    diffs two snapshots to get rates; see ``repro.core.tune``."""
+
+    __slots__ = ("workers", "shared")
+
+    def __init__(self, n_workers: int):
+        self.workers = [WorkerCounters(w) for w in range(max(1, n_workers))]
+        self.shared = WorkerCounters(-1)
+
+    def w(self, wid) -> WorkerCounters:
+        """The struct a hot site should bump: the owning worker's, or the
+        shared one when the caller is not a worker thread (or uses a
+        synthetic out-of-range id, like the switch drainer)."""
+        workers = self.workers
+        if wid is not None and 0 <= wid < len(workers):
+            return workers[wid]
+        return self.shared
+
+    _SUM_FIELDS = ("tasks_done", "tasks_cancelled", "chunks_done", "busy_ns",
+                   "steals_hit", "steals_miss", "delegated", "served",
+                   "fallbacks", "created")
+
+    def snapshot(self) -> dict:
+        """Racy but tear-free merged view (see class docstring)."""
+        out = {k: getattr(self.shared, k) for k in self._SUM_FIELDS}
+        ewma_max = 0.0
+        ewma_sq = 0.0
+        nested = 0
+        for wc in self.workers:
+            for k in self._SUM_FIELDS:
+                out[k] += getattr(wc, k)
+            nested += wc.created
+            if wc.ewma_task_ns > ewma_max:
+                ewma_max = wc.ewma_task_ns
+                ewma_sq = wc.ewma_task_sq
+        # worker-side spawns only (shared.created is external producers):
+        # the detector's nested-production ratio needs the split
+        out["nested_created"] = nested
+        # the busiest worker's EWMA pair: per-worker streams are single-
+        # writer exact, and max() picks the stream that saw real work
+        out["ewma_task_ns"] = ewma_max
+        out["ewma_task_sq"] = ewma_sq
         return out
 
 

@@ -114,10 +114,10 @@ from typing import Callable, Iterable, Optional, Union
 from repro.core.asm import MailBox, MailBoxPool, WaitFreeDependencySystem
 from repro.core.atomic import AtomicU64
 from repro.core.deps_locked import LockedDependencySystem
-from repro.core.instrument import Tracer
+from repro.core.instrument import CounterPlane, Tracer
 from repro.core.parking import PARKING_KINDS
 from repro.core.pool import TaskPool
-from repro.core.scheduler import SCHEDULER_KINDS, WorksharingBoard
+from repro.core.scheduler import SwitchableScheduler, WorksharingBoard
 from repro.core.task import DONE, Task, TaskRef, _NO_PARTIAL
 
 _current_task = threading.local()
@@ -365,7 +365,7 @@ class TaskRuntime:
                  tracer: Optional[Tracer] = None,
                  spsc_capacity: int = 256, parking: str = "slots",
                  sanitize: Union[bool, str, None] = None,
-                 explore=None, name: str = ""):
+                 explore=None, name: str = "", tune=False):
         self.n_workers = n_workers
         # name distinguishes runtimes sharing one process (RuntimeCluster):
         # it prefixes worker thread names and, critically, the schedule
@@ -382,13 +382,16 @@ class TaskRuntime:
             self._defer_unregister = True  # conservative nesting semantics
         else:
             raise ValueError(deps)
-        sched_cls = SCHEDULER_KINDS[scheduler]
-        kw = dict(policy=policy)
-        if scheduler == "delegation":
-            kw.update(n_numa=n_numa, spsc_capacity=spsc_capacity,
-                      instrument=self.tracer)
-        self.scheduler = sched_cls(n_workers, **kw)
-        self.scheduler_kind = scheduler
+        # counter plane (core/instrument.py): per-worker single-writer
+        # counters the hot paths bump and the tune controller samples
+        self.counters = CounterPlane(n_workers)
+        # stable facade: the concrete policy impl behind it can be
+        # hot-swapped at runtime (retune / repro.core.tune). Validates
+        # scheduler and policy names up front with a clear ValueError.
+        self.scheduler = SwitchableScheduler(
+            scheduler, n_workers, policy=policy, n_numa=n_numa,
+            spsc_capacity=spsc_capacity, instrument=self.tracer,
+            counters=self.counters)
         # wake hook: every scheduler calls this once the task is visible to
         # consumers, so the single-wake decision sits next to the enqueue
         self.scheduler.on_enqueue = self._on_enqueue
@@ -421,6 +424,17 @@ class TaskRuntime:
         # plain, racy updates; every consumer clamps to [MIN, MAX])
         self._ewma_arrival_s = 0.005
         self._last_arrival_ns = 0
+        # park-timeout knobs, per runtime (defaults = the historical module
+        # constants). The tune controller adjusts these at runtime; reads
+        # are racy-but-clamped, so a mid-flight change is only advisory.
+        self.park_timeout_min_s = _PARK_TIMEOUT_MIN_S
+        self.park_timeout_max_s = _PARK_TIMEOUT_MAX_S
+        self.park_ewma_alpha = _PARK_EWMA_ALPHA
+        self.park_ewma_mult = _PARK_EWMA_MULT
+        # wake fan-out: parked workers woken per enqueue. 1 (the futex
+        # single-wake default) unless the controller widens it to absorb
+        # bursts; clamped to n_workers at the wake site.
+        self.wake_fanout = 1
         # tasksan (repro.analyze.tsan): sanitize=True raises TaskSanError at
         # shutdown, "report" only collects; None defers to REPRO_SANITIZE
         # ("1" -> True, "report" -> report mode). Off (None on every hook
@@ -459,8 +473,67 @@ class TaskRuntime:
             else:  # explore=True: default preemption-bounded policy
                 self._explorer = ScheduleExplorer()
             self._explorer.install(self)
+        # self-tuning controller (repro.core.tune): tune=True samples the
+        # counter plane on a background thread and retunes the runtime when
+        # it detects a pathology. tune= also accepts a TuneConfig (or a
+        # kwargs dict for one). Never started under a schedule explorer —
+        # exploration owns the schedule; tests drive retune() directly.
+        self.tuner = None
+        if tune:
+            from repro.core.tune import TuneConfig, TuneController
+            if isinstance(tune, TuneConfig):
+                cfg = tune
+            elif isinstance(tune, dict):
+                cfg = TuneConfig(**tune)
+            else:
+                cfg = TuneConfig()
+            self.tuner = TuneController(self, cfg)
 
     # ---------------------------------------------------------------- infra
+    @property
+    def scheduler_kind(self) -> str:
+        """The currently-installed scheduler implementation's kind (tracks
+        hot-swaps; was a plain attribute before the runtime became
+        retunable)."""
+        return self.scheduler.kind
+
+    @property
+    def scheduler_policy(self) -> str:
+        return self.scheduler.policy
+
+    def retune(self, *, scheduler: Optional[str] = None,
+               policy: Optional[str] = None,
+               park_timeout_min_s: Optional[float] = None,
+               park_timeout_max_s: Optional[float] = None,
+               park_ewma_alpha: Optional[float] = None,
+               park_ewma_mult: Optional[float] = None,
+               wake_fanout: Optional[int] = None) -> Optional[int]:
+        """Adjust the runtime while it runs. Safe from any thread.
+
+        ``scheduler``/``policy`` hot-swap the scheduler implementation via
+        the drain-and-switch protocol (see SwitchableScheduler); the park
+        knobs and ``wake_fanout`` are plain advisory stores (readers clamp,
+        so a racy read at worst perturbs one timeout). Returns the number
+        of queued tasks moved by a scheduler switch, or None if no switch
+        happened. Unknown names raise ValueError before anything changes.
+        """
+        from repro.core.tune import KNOB_IDS
+        moved = None
+        if scheduler is not None or policy is not None:
+            moved = self.scheduler.switch(scheduler, policy)
+            if moved >= 0:
+                self.tracer.event("tune.switch", moved)
+        for knob, value in (("park_timeout_min_s", park_timeout_min_s),
+                            ("park_timeout_max_s", park_timeout_max_s),
+                            ("park_ewma_alpha", park_ewma_alpha),
+                            ("park_ewma_mult", park_ewma_mult),
+                            ("wake_fanout", wake_fanout)):
+            if value is None:
+                continue
+            setattr(self, knob, value)
+            self.tracer.event("tune.knob", KNOB_IDS[knob])
+        return moved
+
     def _mailbox(self) -> MailBox:
         """Thread-local MailBox, leased from a shared pool: worker threads
         reuse one box across every task they run, and a box leased by a
@@ -497,6 +570,11 @@ class TaskRuntime:
         if exp is not None:
             exp.await_threads([self._worker_id(w)
                                for w in range(self.n_workers)])
+        if self.tuner is not None and exp is None:
+            # never under an explorer: the controller thread would act
+            # outside the serialized world (explored tests call retune()
+            # directly from registered threads instead)
+            self.tuner.start()
         return self
 
     def _worker_id(self, wid: int) -> str:
@@ -505,6 +583,8 @@ class TaskRuntime:
         return f"{self.name}:w{wid}" if self.name else f"w{wid}"
 
     def shutdown(self, wait: bool = True):
+        if self.tuner is not None:
+            self.tuner.stop()  # no retunes during drain/teardown
         if wait:
             self.barrier()
         self._stop = True
@@ -604,6 +684,7 @@ class TaskRuntime:
                 if self._live.load() > 0:
                     self._quiescent.clear()
         self.tracer.event("task.create", task.task_id)
+        self.counters.w(getattr(_current_task, "wid", None)).created += 1
         san = self.san
         if san is not None:
             # before registration: once published the task may run, finish
@@ -724,12 +805,12 @@ class TaskRuntime:
         if task.is_worksharing:
             self._worksharing_ready(task)
             return
-        if self.scheduler_kind == "work-stealing":
-            wid = getattr(_current_task, "wid", None)
-            self.scheduler.add_ready_task(task, worker_id=wid)
-        else:
-            self.scheduler.add_ready_task(
-                task, numa_hint=task.affinity or 0)
+        # both hints always travel: the facade's current implementation
+        # decides which it uses (NUMA buffer for delegation, owning deque
+        # for work-stealing), so a hot-swap never changes this call site
+        self.scheduler.add_ready_task(
+            task, numa_hint=task.affinity or 0,
+            worker_id=getattr(_current_task, "wid", None))
         # the wake happens via the scheduler's on_enqueue hook
 
     def _worksharing_ready(self, ws) -> None:
@@ -811,6 +892,7 @@ class TaskRuntime:
             # the full completion path below, so successors, taskwait and
             # pool recycling behave as if the body returned None
             self.tracer.event("task.cancel", task.task_id)
+            self.counters.w(wid).tasks_cancelled += 1
             if san is not None:
                 san.on_skip(task)
             task.skip()
@@ -824,6 +906,7 @@ class TaskRuntime:
                 san.on_start(task, wid, group_epoch=observed_epoch)
             task.run()
             task.end_ns = time.monotonic_ns()
+            self.counters.w(wid).on_task(task.end_ns - task.start_ns)
             if san is not None:
                 # before unregister: successors join this task's clock via
                 # the completion messages, which need the end tick in place
@@ -852,6 +935,7 @@ class TaskRuntime:
         san = self.san
         exp = self._explorer
         tracer = self.tracer
+        ctr = self.counters.w(wid)
         group = ws.group
         reduce_fn = ws.ws_reduce
         acc = ws.ws_reduce_init
@@ -891,6 +975,7 @@ class TaskRuntime:
                     ws.ws_record_error(e)
                     break
                 ran += 1
+                ctr.chunks_done += 1
         finally:
             _current_task.t = prev
             if san is not None:
@@ -936,7 +1021,7 @@ class TaskRuntime:
         if last:
             dt = (now_ns - last) * 1e-9
             if 0.0 <= dt < 1.0:  # idle gaps are the park backoff's job
-                self._ewma_arrival_s += _PARK_EWMA_ALPHA * \
+                self._ewma_arrival_s += self.park_ewma_alpha * \
                     (dt - self._ewma_arrival_s)
 
     def _park_timeout(self, n_timeouts: int) -> float:
@@ -946,18 +1031,26 @@ class TaskRuntime:
         [MIN, MAX]. The eventcount ablation keeps PR-1's fixed timeout."""
         if self.parking_kind != "slots":
             return _PARK_TIMEOUT_S
-        base = max(_PARK_EWMA_MULT * self._ewma_arrival_s,
-                   _PARK_TIMEOUT_MIN_S)
-        return min(base * (1 << min(n_timeouts, 8)), _PARK_TIMEOUT_MAX_S)
+        base = max(self.park_ewma_mult * self._ewma_arrival_s,
+                   self.park_timeout_min_s)
+        return min(base * (1 << min(n_timeouts, 8)),
+                   self.park_timeout_max_s)
 
     def _on_enqueue(self, numa_hint: int = 0,
                     worker_id: Optional[int] = None):
-        """Scheduler wake hook: a task just became visible — wake exactly
-        one parked worker, preferring the task's NUMA node (or, for
-        work-stealing, the worker whose deque received it)."""
+        """Scheduler wake hook: a task just became visible — wake one
+        parked worker (or ``wake_fanout`` of them when the controller
+        widened the fan-out for a bursty phase), preferring the task's
+        NUMA node (or, for work-stealing, the worker whose deque
+        received it)."""
         prefer_numa = numa_hint if self._n_numa > 1 else None
-        woken = self._parking.wake_one(prefer_numa=prefer_numa,
-                                       prefer_wid=worker_id)
+        fan = self.wake_fanout
+        if fan > 1:
+            woken = self._parking.wake_many(
+                min(fan, self.n_workers), prefer_numa=prefer_numa) > 0
+        else:
+            woken = self._parking.wake_one(prefer_numa=prefer_numa,
+                                           prefer_wid=worker_id)
         if woken:
             self.tracer.event("worker.wake", numa_hint)
         san = self.san
@@ -1115,7 +1208,11 @@ class TaskRuntime:
                 "parks": self._parking.parks.load(),
                 "wakes": self._parking.wakes.load(),
                 "spurious_wakes": self._parking.spurious.load(),
-                "mailboxes": self._mb_pool.stats}
+                "mailboxes": self._mb_pool.stats,
+                "scheduler": {"kind": self.scheduler.kind,
+                              "policy": self.scheduler.policy,
+                              "switches": self.scheduler.switches},
+                "counters": self.counters.snapshot()}
 
 
 class RuntimeCluster:

@@ -10,21 +10,34 @@
 - WorkStealingScheduler: per-worker deques + steal; stands in for the
   LLVM/Intel OpenMP comparison baseline.
 
-All schedulers expose add_ready_task(task) / get_ready_task(worker_id), and
-an ``on_enqueue`` wake hook: when set, it is called once per add_ready_task
-AFTER the task is visible to consumers (with the NUMA / owning-worker hint),
-so the runtime can wake exactly one parked worker next to the enqueue
-instead of broadcasting from a distance.
+All schedulers expose add_ready_task(task, numa_hint=0, worker_id=None) /
+get_ready_task(worker_id), and an ``on_enqueue`` wake hook: when set, it is
+called once per add_ready_task AFTER the task is visible to consumers (with
+the NUMA / owning-worker hint), so the runtime can wake exactly one parked
+worker next to the enqueue instead of broadcasting from a distance.
+
+``SwitchableScheduler`` is the stable facade the runtime actually holds: it
+owns the currently-installed policy implementation and can hot-swap it at a
+quiescent point while the runtime runs (drain-and-switch; see the class
+docstring for the protocol). The self-tuning controller in
+``repro.core.tune`` drives it through ``TaskRuntime.retune``.
 """
 from __future__ import annotations
 
 import random
 import threading
+import time
 from collections import deque
 from typing import Optional
 
+from repro.core.atomic import AtomicU64
 from repro.core.locks import DTLock, MutexLock, PTLock, spin
 from repro.core.spsc import SPSCQueue
+
+#: policy strings UnsyncScheduler understands (anything else would silently
+#: degrade to FIFO — TaskRuntime and SwitchableScheduler validate against
+#: this up front instead)
+VALID_POLICIES = ("fifo", "lifo", "locality")
 
 
 class WorksharingBoard:
@@ -156,7 +169,7 @@ class SyncScheduler:
 
     def __init__(self, n_workers: int, policy: str = "fifo",
                  n_numa: int = 1, spsc_capacity: int = 256,
-                 instrument=None, max_add_spins: int = 64):
+                 instrument=None, max_add_spins: int = 64, counters=None):
         self.n_workers = n_workers
         self._sched = UnsyncScheduler(policy)
         size = max(64, 2 * n_workers)
@@ -166,6 +179,7 @@ class SyncScheduler:
         self._add_locks = [PTLock(size) for _ in range(self._numa)]
         self._instr = instrument
         self._max_add_spins = max_add_spins
+        self.counters = counters  # CounterPlane (see core/instrument.py)
         self.on_enqueue = None  # wake hook: called after the task is visible
 
     def set_ws_board(self, board: WorksharingBoard) -> None:
@@ -176,7 +190,8 @@ class SyncScheduler:
         self._sched.set_ws_board(board)
 
     # -- producer side ------------------------------------------------
-    def add_ready_task(self, task, numa_hint: int = 0):
+    def add_ready_task(self, task, numa_hint: int = 0,
+                       worker_id: Optional[int] = None):
         self._add(task, numa_hint)
         if self.on_enqueue is not None:
             self.on_enqueue(numa_hint)
@@ -205,6 +220,11 @@ class SyncScheduler:
                 # waiter (FIFO => guaranteed ownership) and direct-serve
                 if self._instr:
                     self._instr.event("sched.add_fallback", numa_hint)
+                ctr = self.counters
+                if ctr is not None:
+                    # producer identity unknown here: the shared struct is
+                    # racy-but-monotonic, which rate detection tolerates
+                    ctr.shared.fallbacks += 1
                 # released by _insert_direct's own finally (shared with the
                 # try_lock path above):  lint: ok(lock-try-finally)
                 self._lock.lock()
@@ -244,8 +264,12 @@ class SyncScheduler:
             self._lock.set_item(waiting_id, task)
             self._lock.pop_front()
             served += 1
-        if self._instr and served:
-            self._instr.event("sched.served", served)
+        if served:
+            if self._instr:
+                self._instr.event("sched.served", served)
+            ctr = self.counters
+            if ctr is not None:
+                ctr.shared.served += served  # owner may be any thread
         return served
 
     # -- consumer side ------------------------------------------------
@@ -254,6 +278,9 @@ class SyncScheduler:
         if not acquired:
             if self._instr:
                 self._instr.event("sched.delegated", worker_id)
+            ctr = self.counters
+            if ctr is not None:
+                ctr.w(worker_id).delegated += 1
             if item is None and self.ws_board is not None:
                 # served nothing: a live worksharing loop is claimable
                 # without taking the DTLock at all
@@ -280,16 +307,18 @@ class GlobalLockScheduler:
     ws_board = None  # worksharing descriptor board
 
     def __init__(self, n_workers: int, policy: str = "fifo",
-                 lock_cls=PTLock, **kw):
+                 lock_cls=PTLock, counters=None, **kw):
         self._sched = UnsyncScheduler(policy)
         self._lock = lock_cls(max(64, 2 * n_workers))
+        self.counters = counters
         self.on_enqueue = None  # wake hook: called after the task is visible
 
     def set_ws_board(self, board: WorksharingBoard) -> None:
         self.ws_board = board
         self._sched.set_ws_board(board)
 
-    def add_ready_task(self, task, numa_hint: int = 0):
+    def add_ready_task(self, task, numa_hint: int = 0,
+                       worker_id: Optional[int] = None):
         self._lock.lock()
         try:  # a poisoned policy container must not leak the global lock
             self._sched.add_ready_task(task)
@@ -322,7 +351,7 @@ class WorkStealingScheduler:
     """
 
     def __init__(self, n_workers: int, policy: str = "fifo", seed: int = 0,
-                 **kw):
+                 counters=None, **kw):
         self.n = max(1, n_workers)
         self._qs = [deque() for _ in range(self.n)]
         self._lks = [MutexLock() for _ in range(self.n)]
@@ -332,6 +361,7 @@ class WorkStealingScheduler:
         # thread interleaving)
         self._rngs = [random.Random(seed * 0x9E3779B1 + wid)
                       for wid in range(self.n)]
+        self.counters = counters
         self.on_enqueue = None  # wake hook: called after the task is visible
         self.ws_board = None    # worksharing descriptor board
 
@@ -366,6 +396,7 @@ class WorkStealingScheduler:
             if ws is not None:
                 return ws
         # steal FIFO from a random victim (per-worker RNG)
+        ctr = self.counters
         start = self._rngs[i].randrange(self.n)
         for k in range(self.n):
             v = (start + k) % self.n
@@ -377,7 +408,13 @@ class WorkStealingScheduler:
             finally:
                 self._lks[v].unlock()
             if task is not None:
+                if ctr is not None:
+                    ctr.w(worker_id).steals_hit += 1
                 return task
+        if ctr is not None and self.n > 1:
+            # a full victim scan found nothing: the steal-storm signature
+            # is a high miss rate (every idle worker hammering the locks)
+            ctr.w(worker_id).steals_miss += 1
         return None
 
     def pending(self) -> int:
@@ -392,3 +429,254 @@ SCHEDULER_KINDS = {
     "global-lock": GlobalLockScheduler,
     "work-stealing": WorkStealingScheduler,
 }
+
+
+class SwitchableScheduler:
+    """Stable scheduler facade with hot-swap (drain-and-switch).
+
+    The runtime (and everything installed on it: wake hooks, the
+    worksharing board, tasksan, taskcheck) holds THIS object for the whole
+    run; the concrete policy implementation behind it can be replaced while
+    workers run. The self-tuning controller (``repro.core.tune``) and
+    ``TaskRuntime.retune`` are the intended callers.
+
+    Switch protocol — the quiescent point is between dequeues:
+
+    1. Build the new implementation (wake hook, worksharing board,
+       explorer tag and counter plane wired; registered ``impl_watchers``
+       — tasksan / taskcheck lock-watching — run before it is published).
+    2. Close the producer gate (``_switching = True``) and wait for
+       in-flight ``add_ready_task`` calls to drain (``_active == 0``).
+       Producers that arrive meanwhile block at the gate, so no new task
+       can land in the retiring implementation.
+    3. Publish the new implementation (``_impl = new``): every subsequent
+       dequeue and every gated producer uses it.
+    4. Drain the old one: repeatedly dequeue with a synthetic worker id
+       (``n_workers`` — out of range of real workers, so the DTLock's
+       per-id delegation slots cannot collide with a live worker) and
+       re-enqueue into the new implementation. Consumers still inside the
+       old implementation's ``get_ready_task`` are harmless: whatever they
+       dequeue concurrently they execute, and a delegated waiter drains
+       through FIFO lock ownership with either a served task or None. The
+       shared worksharing board is detached from the retiree first so the
+       drain moves queued *tasks* only, never live loop descriptors.
+    5. Reopen the gate. Re-enqueues in step 4 fired the normal on_enqueue
+       wake hooks, so parked workers converge on the new implementation.
+
+    Consumers are deliberately NOT gated: a dequeue hitting the retiring
+    implementation mid-drain can only *remove* work, which is executed
+    normally — only producers can strand a task, hence only adds pay the
+    two-atomic-op gate check.
+    """
+
+    def __init__(self, kind: str, n_workers: int, policy: str = "fifo", *,
+                 n_numa: int = 1, spsc_capacity: int = 256,
+                 instrument=None, counters=None):
+        if kind not in SCHEDULER_KINDS:
+            raise ValueError(
+                f"unknown scheduler {kind!r} (valid: "
+                f"{', '.join(sorted(SCHEDULER_KINDS))})")
+        if policy not in VALID_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r} (valid: "
+                f"{', '.join(VALID_POLICIES)})")
+        self.n_workers = n_workers
+        self._n_numa = n_numa
+        self._spsc_capacity = spsc_capacity
+        self._instr = instrument
+        self.counters = counters
+        self._on_enqueue = None
+        self._explorer_ref = None
+        self._ws_board = None
+        #: tasksan hook (install() sets it): the switch commit publishes a
+        #: sync-channel clock that producers resuming past the gate join —
+        #: the happens-before edge of the retune handoff
+        self.san = None
+        #: callbacks(impl) run on every implementation before it is
+        #: published — tasksan/taskcheck append their lock-watchers here so
+        #: a post-install switch keeps the new locks monitored
+        self.impl_watchers: list = []
+        self._active = AtomicU64(0)      # in-flight producers
+        self._switching = False          # producer gate (GIL-visible bool)
+        self._gate = threading.Condition(threading.Lock())
+        self._switch_mx = threading.Lock()
+        self.switches = 0                # committed hot-swaps
+        self.kind = kind
+        self.policy = policy
+        self._impl = self._make_impl(kind, policy)
+
+    # ------------------------------------------------------------- wiring
+    def _make_impl(self, kind: str, policy: str):
+        kw = dict(policy=policy, counters=self.counters)
+        if kind == "delegation":
+            kw.update(n_numa=self._n_numa,
+                      spsc_capacity=self._spsc_capacity,
+                      instrument=self._instr)
+        impl = SCHEDULER_KINDS[kind](self.n_workers, **kw)
+        impl.on_enqueue = self._on_enqueue
+        if self._ws_board is not None:
+            impl.set_ws_board(self._ws_board)
+        if self._explorer_ref is not None:
+            impl._explorer = self._explorer_ref
+        for cb in self.impl_watchers:
+            cb(impl)
+        return impl
+
+    @property
+    def on_enqueue(self):
+        return self._on_enqueue
+
+    @on_enqueue.setter
+    def on_enqueue(self, fn):
+        self._on_enqueue = fn
+        self._impl.on_enqueue = fn
+
+    @property
+    def _explorer(self):
+        return self._explorer_ref
+
+    @_explorer.setter
+    def _explorer(self, exp):
+        self._explorer_ref = exp
+        self._impl._explorer = exp
+
+    def set_ws_board(self, board: WorksharingBoard) -> None:
+        self._ws_board = board
+        self._impl.set_ws_board(board)
+
+    @property
+    def ws_board(self):
+        return self._ws_board
+
+    # ---------------------------------------------------------- hot paths
+    def add_ready_task(self, task, numa_hint: int = 0,
+                       worker_id: Optional[int] = None):
+        self._active.fetch_add(1)
+        while self._switching:
+            # gate closed: back out (the switcher waits for _active == 0)
+            # and re-enter once the swap committed
+            self._active.fetch_add(-1)
+            self._gate_wait()
+            self._active.fetch_add(1)
+        try:
+            self._impl.add_ready_task(task, numa_hint=numa_hint,
+                                      worker_id=worker_id)
+        finally:
+            self._active.fetch_add(-1)
+
+    def get_ready_task(self, worker_id: int):
+        # consumers are not gated (see class docstring); _impl is re-read
+        # per call, so at most one dequeue lands on a retiring impl
+        return self._impl.get_ready_task(worker_id)
+
+    def pending(self) -> int:
+        return self._impl.pending()
+
+    def _gate_wait(self):
+        exp = self._explorer_ref
+        if exp is not None:
+            # serialized world: a native condition wait would wedge the
+            # explorer token; the caller's while loop re-checks the gate
+            st = exp.wait_until(lambda: not self._switching,
+                                kind="tune-gate",
+                                label="sched.switch-gate", timed=True)
+            if st != "disabled":
+                self._san_gate_resume()
+                return
+        with self._gate:
+            while self._switching:
+                self._gate.wait(0.05)
+        self._san_gate_resume()
+
+    def _san_gate_resume(self):
+        """A producer resumed past the reopened gate: join the switch
+        commit's clock (everything the switcher did — drain re-enqueues
+        included — happens-before this producer's add)."""
+        san = self.san
+        if san is not None:
+            san.on_sync_acquire(("sched.switch", id(self)))
+
+    # ------------------------------------------------------------- switch
+    def switch(self, kind: Optional[str] = None,
+               policy: Optional[str] = None) -> int:
+        """Hot-swap the scheduler implementation. Returns the number of
+        queued tasks moved across, or -1 when the request is a no-op
+        (already that configuration). Raises ValueError on unknown names.
+        Safe to call from any thread; concurrent switches serialize."""
+        kind = kind or self.kind
+        policy = policy or self.policy
+        if kind not in SCHEDULER_KINDS:
+            raise ValueError(
+                f"unknown scheduler {kind!r} (valid: "
+                f"{', '.join(sorted(SCHEDULER_KINDS))})")
+        if policy not in VALID_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r} (valid: "
+                f"{', '.join(VALID_POLICIES)})")
+        self._switch_mx.acquire()
+        try:
+            if kind == self.kind and policy == self.policy:
+                return -1
+            new = self._make_impl(kind, policy)
+            self._switching = True
+            try:
+                self._await_producers()
+                old = self._impl
+                self._impl = new  # publish: consumers + gated adds move over
+                self.kind, self.policy = kind, policy
+                moved = self._drain(old, new)
+                self.switches += 1
+                san = self.san
+                if san is not None:
+                    # publish the switcher's clock BEFORE the gate reopens:
+                    # resuming producers join it in _san_gate_resume
+                    san.on_sync_release(("sched.switch", id(self)))
+            finally:
+                # the gate MUST reopen even if a drain dequeue raises —
+                # a permanently closed gate would wedge every producer
+                with self._gate:
+                    self._switching = False
+                    self._gate.notify_all()
+            return moved
+        finally:
+            self._switch_mx.release()
+
+    def _await_producers(self):
+        """Block until no producer is inside the retiring implementation.
+        Producers observe ``_switching`` AFTER bumping ``_active`` (and the
+        GIL orders those against this thread's reads), so once we see zero
+        every later add either saw the gate or lands in the new impl."""
+        exp = self._explorer_ref
+        if exp is not None:
+            st = exp.wait_until(lambda: self._active.load() == 0,
+                                kind="tune-gate",
+                                label="sched.switch-quiesce", timed=True)
+            if st != "disabled":
+                return
+        spins = 0
+        while self._active.load():
+            spins += 1
+            time.sleep(0 if spins < 200 else 0.0002)
+
+    def _drain(self, old, new) -> int:
+        """Move every queued task from the retiring implementation into the
+        published one. Runs with the producer gate closed; concurrent
+        consumers may race individual dequeues (they execute what they
+        win). Worksharing descriptors live on the shared board, never in
+        the queues — the board is detached from the retiree so its
+        empty-queue poll cannot hand a live descriptor to the drainer."""
+        old.ws_board = None
+        inner = getattr(old, "_sched", None)
+        if inner is not None:
+            inner.ws_board = None
+        old.on_enqueue = None  # re-enqueues wake through the NEW impl only
+        drain_wid = self.n_workers  # synthetic id: no DTLock slot collision
+        moved = 0
+        while True:
+            task = old.get_ready_task(drain_wid)
+            if task is None:
+                break
+            new.add_ready_task(task, numa_hint=getattr(task, "affinity",
+                                                       None) or 0)
+            moved += 1
+        return moved

@@ -1,0 +1,362 @@
+"""Self-tuning runtime: online pathology detection + adaptive control.
+
+"Detrimental task execution patterns in mainstream OpenMP runtimes"
+(Tuft et al.) catalogs runtime pathologies — wake churn, steal storms,
+serialized creation, granularity mismatch — that no fixed scheduler
+configuration survives across workload phases. This module closes the
+loop the paper leaves open: a controller thread samples the counter
+plane (``repro.core.instrument.CounterPlane``: per-worker single-writer
+counters the hot paths bump for near-zero cost), converts counter deltas
+into named pathology *signals*, and acts on the runtime while it runs:
+
+* hot-swap the scheduler kind/policy (``SwitchableScheduler.switch``,
+  drain-and-switch at a quiescent point between dequeues);
+* resize the park-timeout EWMA bounds (per-runtime fields, advisory
+  racy reads clamped by every consumer);
+* widen/narrow the wake fan-out (parked workers woken per enqueue).
+
+Detection is *rate-based*: the detector diffs two counter snapshots and
+looks at per-second rates and ratios, so the racy-but-monotonic shared
+counters (multi-writer threads) only ever under-count a rate slightly.
+Every decision is hysteresis-gated (a signal must persist for
+``hysteresis`` consecutive samples) and action is cooldown-limited, so
+one noisy window cannot thrash the scheduler back and forth.
+
+The controller NEVER runs under a schedule explorer (taskcheck owns the
+schedule there); explored scenarios drive ``TaskRuntime.retune``
+directly from registered threads instead. See docs/RUNTIME.md,
+"Adaptive runtime".
+"""
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass
+from typing import Optional
+
+#: pathology signal -> trace event arg ("tune.signal" in the EVENTS catalog)
+SIGNAL_IDS = {
+    "wake_churn": 1,            # spurious wakes dominate useful wakes
+    "steal_storm": 2,           # steal misses dwarf completed tasks
+    "producer_starvation": 3,   # producers blocking as fallback waiters
+    "bimodal_granularity": 4,   # task-duration CV^2 says two populations
+    "delegation_convoy": 5,     # most dequeues are served delegations
+    "burst": 6,                 # arrival rate step-up vs previous window
+    "idle_churn": 7,            # park/wake cycling with little work
+    "nested_spawn": 8,          # production is worker-side: distribution
+                                # serializes behind the delegation lock
+}
+
+#: action ranking when several signals clear hysteresis in one window —
+#: a scheduler-kind mismatch is first-order (10x swings), policy second,
+#: park knobs third; burst's fan-out widening is the most speculative
+_PRIORITY = {
+    "steal_storm": 5,
+    "nested_spawn": 4, "producer_starvation": 4, "delegation_convoy": 4,
+    "bimodal_granularity": 3,
+    "wake_churn": 2, "idle_churn": 2,
+    "burst": 1,
+}
+
+#: runtime knob -> trace event arg ("tune.knob" in the EVENTS catalog)
+KNOB_IDS = {
+    "park_timeout_min_s": 1,
+    "park_timeout_max_s": 2,
+    "park_ewma_alpha": 3,
+    "park_ewma_mult": 4,
+    "wake_fanout": 5,
+}
+
+
+@dataclass
+class TuneConfig:
+    """Controller knobs. Defaults favor stability over reaction speed."""
+
+    # Sampling at 50 Hz costs one snapshot (~tens of microseconds) per
+    # tick — well under 0.1% of a core — and buys a 40-200 ms reaction
+    # (hysteresis * interval + residual cooldown), short enough to catch
+    # sub-second workload phases.
+    interval_s: float = 0.02      # counter-plane sampling period
+    hysteresis: int = 2           # consecutive samples before acting
+    cooldown_s: float = 0.15      # min gap between actions
+    enable_switch: bool = True    # allow scheduler kind/policy hot-swaps
+    enable_knobs: bool = True     # allow park/fan-out adjustments
+    # -- detector thresholds (per-second rates / dimensionless ratios) --
+    spurious_ratio: float = 1.0       # spurious wakes per completed task
+    # Steal misses per completed task. Parked workers do not scan, so a
+    # storm never reaches misses >> tasks: measured on a single-producer
+    # fine-task workload (8 workers) the losing work-stealing config runs
+    # at ~0.5 misses/task while the healthy nested-production shape stays
+    # near ~0.1 — 0.3 splits them with 2x margin on either side.
+    steal_miss_ratio: float = 0.3
+    fallback_rate: float = 2.0        # fallback enqueues per second
+    convoy_ratio: float = 0.6         # delegated dequeues per task
+    nested_ratio: float = 0.5         # worker-side spawns per task
+    # EWMA CV^2 threshold. A steady single population measures ~0.04 on
+    # this plane; sustained fine/coarse mixes measure >= 5 (a skewed mix's
+    # variance is dominated by the mode separation). One preemption
+    # outlier can spike a single window past 1 — hysteresis absorbs it —
+    # so the bar sits at 3, between noise spikes and real mixes.
+    bimodal_cv2: float = 3.0
+    # Mean-duration gate for the bimodal signal. OS timer preemption (a
+    # multi-ms tick landing on a ~5us task every few hundred tasks) makes
+    # a pure-fine population measure heavy-tailed in CV^2 alone; a real
+    # fine/coarse mix also drags the EWMA *mean* up toward the coarse
+    # mode, which preemption spikes are too rare to do. 50us also clears
+    # task bodies that spawn (a spawn costs ~25us of body time).
+    bimodal_min_ns: float = 50_000.0
+    burst_factor: float = 3.0         # arrival-rate step-up multiplier
+    idle_parks_rate: float = 200.0    # parks/s with low task rate
+    min_task_rate: float = 1.0        # below this a window is "quiet"
+    # Upper bound for the burst action's wake fan-out widening. None =
+    # min(n_workers, os.cpu_count()): waking more workers than cores only
+    # adds context switches on the machine actually running this.
+    max_fanout: Optional[int] = None
+    # Steal-storm remedy selector: with at most this many cores the
+    # central global-lock queue wins — there is no real contention for
+    # delegation's SPSC/serve pipeline to avoid, so the pipeline is pure
+    # overhead. With more cores, delegation is the remedy (the paper's
+    # regime: a central lock is what storms are made of).
+    central_cpu_max: int = 2
+
+
+class PathologyDetector:
+    """Stateless-ish rate detector: feed it successive counter snapshots,
+    get back the set of pathology signals active in that window."""
+
+    def __init__(self, cfg: Optional[TuneConfig] = None):
+        self.cfg = cfg or TuneConfig()
+        self._prev: Optional[dict] = None
+        self._prev_task_rate = 0.0
+
+    @staticmethod
+    def _merge(runtime) -> dict:
+        """One flat sample: counter plane + parking-lot counters."""
+        s = runtime.counters.snapshot()
+        p = runtime._parking
+        s["parks"] = p.parks.load()
+        s["wakes"] = p.wakes.load()
+        s["spurious"] = p.spurious.load()
+        return s
+
+    def sample(self, runtime) -> dict:
+        """Take a snapshot, diff against the previous one, and return
+        ``{"signals": {name: intensity}, "rates": {...}}`` for the window.
+        The first call only primes the baseline (no signals)."""
+        cur = self._merge(runtime)
+        prev, self._prev = self._prev, cur
+        if prev is None:
+            return {"signals": {}, "rates": {}}
+        d = {k: cur[k] - prev[k] for k in prev
+             if isinstance(prev[k], (int, float)) and not k.startswith("ewma")}
+        d["ewma_task_ns"] = cur.get("ewma_task_ns", 0.0)
+        d["ewma_task_sq"] = cur.get("ewma_task_sq", 0.0)
+        return self.detect(d, self.cfg.interval_s)
+
+    def detect(self, delta: dict, dt: float) -> dict:
+        """Window deltas -> named signals. ``delta`` holds counter
+        differences over the window plus the current duration EWMAs;
+        ``dt`` is the window length in seconds."""
+        cfg = self.cfg
+        dt = max(dt, 1e-6)
+        signals: dict[str, float] = {}
+        tasks = delta.get("tasks_done", 0) + delta.get("chunks_done", 0)
+        task_rate = tasks / dt
+        rates = {"task_rate": task_rate,
+                 "park_rate": delta.get("parks", 0) / dt,
+                 "fallback_rate": delta.get("fallbacks", 0) / dt}
+        busy = tasks >= cfg.min_task_rate * dt
+
+        spurious = delta.get("spurious", 0)
+        if busy and spurious > cfg.spurious_ratio * max(1.0, tasks):
+            signals["wake_churn"] = spurious / max(1.0, tasks)
+        misses = delta.get("steals_miss", 0)
+        if misses > cfg.steal_miss_ratio * max(1.0, tasks):
+            signals["steal_storm"] = misses / max(1.0, tasks)
+        fb = delta.get("fallbacks", 0)
+        if fb / dt >= cfg.fallback_rate:
+            signals["producer_starvation"] = fb / dt
+        served = delta.get("delegated", 0) + delta.get("served", 0)
+        if busy and tasks and served > cfg.convoy_ratio * tasks:
+            signals["delegation_convoy"] = served / tasks
+        nested = delta.get("nested_created", 0)
+        if busy and nested > cfg.nested_ratio * max(1.0, tasks):
+            signals["nested_spawn"] = nested / max(1.0, tasks)
+        # duration bimodality: CV^2 = Var/E^2 from the EWMA pair. A single
+        # duration population has CV^2 << 1; a fine/coarse mix pushes it
+        # past 1 (the mix variance is dominated by the mode separation).
+        e = delta.get("ewma_task_ns", 0.0)
+        sq = delta.get("ewma_task_sq", 0.0)
+        if busy and e >= cfg.bimodal_min_ns:
+            cv2 = max(0.0, sq - e * e) / (e * e)
+            if cv2 >= cfg.bimodal_cv2:
+                signals["bimodal_granularity"] = cv2
+        prev_rate, self._prev_task_rate = self._prev_task_rate, task_rate
+        if prev_rate > 0.0 and task_rate > cfg.burst_factor * prev_rate \
+                and tasks > 4:
+            signals["burst"] = task_rate / prev_rate
+        parks = delta.get("parks", 0)
+        if not busy and parks / dt >= cfg.idle_parks_rate:
+            signals["idle_churn"] = parks / dt
+        return {"signals": signals, "rates": rates}
+
+
+class TuneController:
+    """Background controller: sample -> detect -> (hysteresis, cooldown)
+    -> act via ``TaskRuntime.retune``. One thread per runtime, started by
+    ``TaskRuntime.start`` (never under an explorer) and stopped by
+    ``shutdown``. ``step()`` is callable directly for deterministic
+    tests — it runs one full sample/detect/act iteration inline."""
+
+    def __init__(self, runtime, cfg: Optional[TuneConfig] = None):
+        self.rt = runtime
+        self.cfg = cfg or TuneConfig()
+        self.detector = PathologyDetector(self.cfg)
+        self._stopev = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._streak: dict[str, int] = {}
+        self._since_action = 0.0
+        self.actions: list[tuple[str, str]] = []  # (signal, action) log
+        self.signals_seen: dict[str, int] = {}
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stopev.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="repro-tune", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stopev.set()
+        t = self._thread
+        if t is not None:
+            t.join(timeout=2)
+            self._thread = None
+
+    def _loop(self) -> None:
+        # prime the baseline so the first real window has a delta
+        self.detector.sample(self.rt)
+        while not self._stopev.wait(self.cfg.interval_s):
+            try:
+                self.step()
+            except Exception:
+                # the controller is advisory: a detector/act error must
+                # never take the runtime down. Stop adapting instead.
+                break
+
+    # ------------------------------------------------------------- control
+    def step(self) -> dict:
+        """One sample/detect/act iteration. Returns the detector output."""
+        out = self.detector.sample(self.rt)
+        signals = out["signals"]
+        tracer = self.rt.tracer
+        for name in signals:
+            self.signals_seen[name] = self.signals_seen.get(name, 0) + 1
+            tracer.event("tune.signal", SIGNAL_IDS.get(name, 0))
+        # hysteresis: bump streaks for active signals, clear the rest
+        for name in list(self._streak):
+            if name not in signals:
+                del self._streak[name]
+        for name in signals:
+            self._streak[name] = self._streak.get(name, 0) + 1
+        self._since_action += self.cfg.interval_s
+        if self._since_action < self.cfg.cooldown_s:
+            return out
+        ready = [n for n, k in self._streak.items()
+                 if k >= self.cfg.hysteresis]
+        if not ready:
+            return out
+        # one action per window: rank by action tier first (a kind switch
+        # dwarfs any knob tweak), raw intensity only breaks ties — burst
+        # ratios are numerically huge but its action is the most speculative
+        ready.sort(key=lambda n: (-_PRIORITY.get(n, 0), -signals.get(n, 0.0)))
+        for name in ready:
+            if self._act(name, signals[name]):
+                self._since_action = 0.0
+                self._streak.pop(name, None)
+                break
+        return out
+
+    def _act(self, signal: str, intensity: float) -> bool:
+        """Map one pathology to a runtime adjustment. Returns True if an
+        action was taken (False lets the next ready signal try)."""
+        rt = self.rt
+        cfg = self.cfg
+        kind = rt.scheduler.kind
+        try:
+            if signal == "steal_storm" and cfg.enable_switch:
+                # idle workers hammering victim locks: stop them scanning.
+                # On a small box the central queue is the cheapest fix (no
+                # contention worth avoiding); with real cores, delegation
+                # serves tasks to waiters instead of letting them scan.
+                ncpu = os.cpu_count() or 1
+                target = ("global-lock" if ncpu <= cfg.central_cpu_max
+                          else "delegation")
+                if kind != target:
+                    rt.retune(scheduler=target)
+                    self.actions.append((signal, f"switch:{target}"))
+                    return True
+                return False
+            if signal in ("producer_starvation", "delegation_convoy",
+                          "nested_spawn") and cfg.enable_switch:
+                # producers blocked behind full SPSC buffers / every
+                # dequeue a served delegation / production living on the
+                # workers themselves: per-worker deques give producers a
+                # contention-free insert path
+                if kind != "work-stealing":
+                    rt.retune(scheduler="work-stealing")
+                    self.actions.append((signal, "switch:work-stealing"))
+                    return True
+                return False
+            if not cfg.enable_knobs:
+                return False
+            if signal in ("wake_churn", "idle_churn"):
+                # spurious wake / park cycling burns CPU the producer
+                # needs (acute on few cores): lengthen the park floor,
+                # collapse the fan-out back to single-wake
+                new_min = min(rt.park_timeout_min_s * 4.0, 0.02)
+                changed = False
+                if new_min > rt.park_timeout_min_s:
+                    rt.retune(park_timeout_min_s=new_min,
+                              park_ewma_mult=min(
+                                  rt.park_ewma_mult * 2.0, 256.0))
+                    changed = True
+                if rt.wake_fanout != 1:
+                    rt.retune(wake_fanout=1)
+                    changed = True
+                if changed:
+                    self.actions.append((signal, "knob:park-up"))
+                return changed
+            if signal == "burst":
+                # arrival step-up: widen the wake fan-out so the backlog
+                # is absorbed by several workers, drop the park floor so
+                # re-polls are prompt. Fan-out is capped at the core count:
+                # waking more workers than cores only adds context switches.
+                cap = cfg.max_fanout
+                if cap is None:
+                    cap = min(rt.n_workers, os.cpu_count() or 1)
+                changed = False
+                if rt.wake_fanout < cap:
+                    rt.retune(wake_fanout=min(rt.wake_fanout * 2, cap))
+                    changed = True
+                if rt.park_timeout_min_s > 0.001:
+                    rt.retune(park_timeout_min_s=0.001,
+                              park_ewma_mult=32.0)
+                    changed = True
+                if changed:
+                    self.actions.append((signal, "knob:fanout-up"))
+                return changed
+            if signal == "bimodal_granularity":
+                # fine/coarse mix: LIFO runs fresh (usually fine) tasks
+                # while their state is hot instead of draining the coarse
+                # backlog first
+                if cfg.enable_switch and rt.scheduler.policy != "lifo":
+                    rt.retune(policy="lifo")
+                    self.actions.append((signal, "switch:lifo"))
+                    return True
+                return False
+        except ValueError:
+            return False
+        return False

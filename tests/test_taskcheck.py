@@ -84,6 +84,15 @@ def test_finds_convoy_livelock():
     _assert_replays(spec, rep)
 
 
+def test_finds_tune_stranded_task():
+    # the no-drain switch strands queued tasks: a policy switch racing
+    # task enqueue must be caught when the quiescent point is skipped
+    # (the CLEAN "tune-switch" scenario proves the real protocol is sound)
+    spec, rep = _find("tune-stranded-task")
+    assert LIVELOCK in rep.kinds()
+    _assert_replays(spec, rep)
+
+
 # ------------------------------------------------------------ clean gauntlet
 @pytest.mark.parametrize("name", sorted(CLEAN))
 def test_clean_scenarios_have_no_findings(name):
